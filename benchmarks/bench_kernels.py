@@ -1,0 +1,76 @@
+"""Kernel-adjacent benchmarks (CPU-host measurable).
+
+Pallas kernels only *validate* on CPU (interpret mode ≈ Python loop — not a
+perf number). What we CAN measure here and carry to the roofline story:
+
+* the XLA fallback implementations the kernels replace (segment_sum
+  scatter, gather+reduce embedding bag, chunked attention),
+* the Palgol substrate ops at graph sizes matching the paper's datasets
+  (scaled to one host).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.graph import generators as G
+from repro.graph import ops as gops
+from repro.models.transformer import attention as att
+
+
+def run():
+    out = []
+    rng = np.random.default_rng(0)
+
+    # segment-sum (the Pregel combiner hot path) at increasing edge counts
+    for scale, d in [(12, 32), (14, 32), (14, 128)]:
+        g = G.rmat(scale, avg_degree=16, seed=1)
+        vals = jnp.asarray(
+            rng.normal(size=(g.n_edges, d)).astype(np.float32)
+        )
+        fn = jax.jit(
+            lambda v, g=g: gops.segment_reduce(
+                v, g.dst, g.n_vertices, "sum", indices_are_sorted=True,
+                mask=g.edge_mask,
+            )
+        )
+        us = time_fn(fn, vals)
+        gbps = g.n_edges * d * 4 / (us / 1e6) / 1e9
+        out.append(row(
+            f"kernels/segment_sum/E{g.n_edges}_D{d}", us, f"GB/s={gbps:.2f}"
+        ))
+
+    # chunked (flash-style) vs dense attention, fwd
+    for s in (512, 1024):
+        q = jnp.asarray(rng.normal(size=(1, s, 8, 64)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, s, 4, 64)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, s, 4, 64)).astype(np.float32))
+        pos = jnp.arange(s)
+        dense = jax.jit(
+            lambda q, k, v: att.attention_dense(q, k, v, pos, pos, True)
+        )
+        chunk = jax.jit(
+            lambda q, k, v: att.attention_chunked(
+                q, k, v, pos, pos, True, chunk_kv=256
+            )
+        )
+        us_d = time_fn(dense, q, k, v)
+        us_c = time_fn(chunk, q, k, v)
+        out.append(row(f"kernels/attention_dense/S{s}", us_d, ""))
+        out.append(row(
+            f"kernels/attention_flash/S{s}", us_c,
+            f"vs_dense={us_d / max(us_c, 1e-9):.2f}x",
+        ))
+
+    # embedding bag (take+sum fallback) at recsys sizes
+    table = jnp.asarray(rng.normal(size=(100_000, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 100_000, (4096, 39)).astype(np.int32))
+    from repro.models.recsys.embedding import embedding_bag
+
+    bag = jax.jit(lambda t, i: embedding_bag(t, i))
+    us = time_fn(bag, table, idx)
+    out.append(row("kernels/embedding_bag/B4096_F39", us, ""))
+    return out

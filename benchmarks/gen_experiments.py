@@ -1,0 +1,87 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments > experiments/roofline_sections.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def load(mesh):
+    recs = {}
+    for f in sorted(glob.glob(f"experiments/dryrun/{mesh}/*.json")):
+        r = json.loads(Path(f).read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def main():
+    single = load("single")
+    multi = load("multi")
+    print("## §Dry-run — 40 cells × 2 meshes (16×16 single-pod; 2×16×16 multi-pod)\n")
+    print("Status per cell (`ok` = lower+compile succeeded; bytes = peak per "
+          "device from `memory_analysis()`; target chip = TPU v5e, 16 GB):\n")
+    print("| arch | shape | single: status / GB / fits | multi: status / GB / fits | compile s (single) |")
+    print("|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for key in sorted(single):
+        s, m = single[key], multi.get(key, {})
+        def cell(r):
+            if not r:
+                return "—"
+            if r["status"] == "skipped":
+                return "skip (justified)"
+            if r["status"] == "failed":
+                return "FAILED"
+            mem = r["memory"]
+            fits = mem["fits_16GB"]
+            out = (f"ok / {fmt_bytes(mem['peak_per_device_bytes'])} / "
+                   f"{'✓' if fits else '✗'}")
+            if not fits and "peak_tpu_corrected_bytes" in mem:
+                out += (f" (TPU-corr {fmt_bytes(mem['peak_tpu_corrected_bytes'])}"
+                        f" {'✓' if mem['fits_16GB_corrected'] else '✗'})")
+            return out
+        for r in (s, m):
+            if r:
+                n_ok += r["status"] == "ok"
+                n_skip += r["status"] == "skipped"
+                n_fail += r["status"] == "failed"
+        comp = s.get("compile_s", "—") if s.get("status") == "ok" else "—"
+        print(f"| {key[0]} | {key[1]} | {cell(s)} | {cell(m)} | {comp} |")
+    print(f"\nTotals: ok={n_ok}, skipped={n_skip} (long_500k × 4 full-attention "
+          f"archs, per harness rule), failed={n_fail}.\n")
+
+    print("\n## §Roofline — single-pod (256 × v5e: 197 TF/s bf16, 819 GB/s "
+          "HBM, 50 GB/s ICI)\n")
+    print("Terms in **seconds per step** from the compiled dry-run; "
+          "`useful` = MODEL_FLOPS / HLO_FLOPS; `frac` = roofline fraction "
+          "(useful model flops per second ÷ peak at the step lower bound).\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck "
+          "| useful | frac | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        r = single[key]
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        note = ""
+        mf = ro.get("model_flops", 0)
+        print(
+            f"| {key[0]} | {key[1]} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"{ro['bottleneck'].replace('_s','')} | "
+            f"{ro.get('useful_flops_ratio', 0):.2f} | "
+            f"{ro.get('roofline_fraction', 0):.4f} | {note} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Roofline summary rows from the dry-run artifacts (§Roofline source)."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(f"experiments/dryrun/{mesh}/*.json")):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def run():
+    out = []
+    recs = load_records("single")
+    if not recs:
+        out.append(row("roofline/missing", 0,
+                       "run launch/dryrun.py first"))
+        return out
+    worst = None
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        out.append(row(
+            name,
+            ro["step_lower_bound_s"] * 1e6,
+            f"bottleneck={ro['bottleneck']};frac={ro.get('roofline_fraction', 0):.4f}"
+            f";fits={r['memory']['fits_16GB']}",
+        ))
+        frac = ro.get("roofline_fraction", 0)
+        if worst is None or frac < worst[1]:
+            worst = (name, frac)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    out.append(row("roofline/summary", 0, f"ok={ok};skipped={sk}"))
+    return out

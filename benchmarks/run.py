@@ -1,0 +1,60 @@
+"""Benchmark harness — one section per paper table + kernel/roofline rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 10]
+
+Prints ``name,us_per_call,derived`` CSV:
+  table4/*   — execution time, Palgol-compiled vs manual-style (paper Tab.4)
+  table5/*   — superstep counts under the three compilers (paper Tab.5)
+  kernels/*  — substrate hot-path timings (XLA fallbacks the Pallas kernels
+               replace; kernels themselves validate in interpret mode)
+  roofline/* — per-cell dry-run roofline terms (from experiments/dryrun)
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10,
+                    help="log2 graph size for table4/5 (default 2^10)")
+    ap.add_argument("--sections", default="table5,table4,kernels,roofline")
+    args = ap.parse_args()
+    sections = set(args.sections.split(","))
+
+    print("name,us_per_call,derived")
+    rows = []
+    if "table5" in sections:
+        from benchmarks import table5_supersteps
+
+        rows += table5_supersteps.run(args.scale)
+        _flush(rows)
+    if "table4" in sections:
+        from benchmarks import table4_exec_time
+
+        rows += table4_exec_time.run(args.scale)
+        _flush(rows)
+    if "kernels" in sections:
+        from benchmarks import bench_kernels
+
+        rows += bench_kernels.run()
+        _flush(rows)
+    if "roofline" in sections:
+        from benchmarks import roofline_report
+
+        rows += roofline_report.run()
+        _flush(rows)
+
+
+_printed = 0
+
+
+def _flush(rows):
+    global _printed
+    for r in rows[_printed:]:
+        print(r, flush=True)
+    _printed = len(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Full-batch GAT training on a Cora-like graph (gat-cora architecture).
+
+    PYTHONPATH=src python examples/gnn_cora.py
+
+The GNN stack rides the same segment-op substrate as the Pregel runtime —
+one GNN layer is one algorithmic superstep (DESIGN.md §5). Trains the
+assigned gat-cora config (reduced dims) to high train accuracy on a
+synthetic community graph where labels = community id.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import from_edge_list, symmetrize
+from repro.models.gnn import GNNConfig, models as gm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def community_graph(n=400, k=4, p_in=0.05, p_out=0.002, d_feat=16, seed=0):
+    """Stochastic block model + community-informative features."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, n)
+    src, dst = [], []
+    for i in range(n):
+        for j in range(i + 1, n):
+            p = p_in if labels[i] == labels[j] else p_out
+            if rng.random() < p:
+                src.append(i)
+                dst.append(j)
+    s, d, w = symmetrize(np.array(src), np.array(dst))
+    g = from_edge_list(s, d, n, w)
+    feats = rng.normal(size=(n, d_feat)).astype(np.float32)
+    feats += np.eye(k)[labels] @ rng.normal(size=(k, d_feat)) * 1.5
+    return g, jnp.asarray(feats), jnp.asarray(labels.astype(np.int32))
+
+
+def main():
+    g, x, labels = community_graph()
+    cfg = GNNConfig(name="gat-cora-demo", variant="gat", n_layers=2,
+                    d_hidden=8, n_heads=8, d_in=x.shape[1], n_out=4)
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "x": x, "src": g.src, "dst": g.dst, "emask": g.edge_mask,
+        "labels": labels, "lmask": jnp.ones((g.n_vertices,), jnp.float32),
+    }
+    oc = AdamWConfig(lr=5e-3, weight_decay=0.0)
+    st = adamw_init(params, oc)
+
+    @jax.jit
+    def step(p, s):
+        loss, grads = jax.value_and_grad(
+            lambda q: gm.loss_fn(q, batch, cfg)
+        )(p)
+        p, s = adamw_update(grads, s, p, oc)
+        return p, s, loss
+
+    for i in range(200):
+        params, st, loss = step(params, st)
+        if (i + 1) % 50 == 0:
+            logits = gm.forward(params, batch, cfg)
+            acc = float(jnp.mean(jnp.argmax(logits, -1) == labels))
+            print(f"epoch {i+1:3d}  loss {float(loss):.4f}  acc {acc:.3f}")
+    assert acc > 0.8, "GAT failed to learn the communities"
+    print("learned the community structure ✓")
+
+
+if __name__ == "__main__":
+    main()

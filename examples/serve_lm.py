@@ -1,0 +1,69 @@
+"""Batched LM serving: prefill + decode with the KV ring buffer.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --prompt-len 64 \
+        --decode-steps 32
+
+Demonstrates the serving path the ``decode_*`` dry-run cells lower:
+prefill materializes the window-bounded KV cache, then batched greedy
+decode steps stream tokens; reports prefill/decode throughput. The SWA
+preset keeps an O(window) cache (the h2o-danube long_500k regime).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig, model as tm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--swa-window", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=384, vocab_size=2048, d_head=16, swa_window=args.swa_window,
+        param_dtype="float32", compute_dtype="float32",
+        attn_chunk_q=64, attn_chunk_kv=64,
+    )
+    params = tm.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size,
+    )
+
+    prefill = jax.jit(lambda p, t: tm.prefill(p, t, cfg, full_logits=False))
+    decode = jax.jit(lambda p, c, t: tm.decode_step(p, c, t, cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = jax.block_until_ready(prefill(params, prompts))
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}×{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.1f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:,.0f} tok/s); "
+          f"KV cache len = {cache['k'].shape[2]} (window-bounded)")
+
+    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    toks = [cur]
+    t0 = time.perf_counter()
+    for _ in range(args.decode_steps):
+        logits, cache = decode(params, cache, cur)
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks.append(cur)
+    jax.block_until_ready(cur)
+    t_dec = time.perf_counter() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"decode: {args.decode_steps} steps × batch {args.batch} in "
+          f"{t_dec*1e3:.1f} ms "
+          f"({args.batch*args.decode_steps/t_dec:,.0f} tok/s)")
+    print("sampled token ids (first request):", out[0, :16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end LM training driver (deliverable (b) end-to-end example).
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300   # real hardware
+
+Presets:
+  tiny — ~2M params; a few hundred steps run in minutes on this CPU
+          container and the loss visibly converges on synthetic Zipf text.
+  100m — ~100M-param config (d_model 640, 12 layers, GQA 4:1); the shape
+          intended for the "train a ~100M model a few hundred steps" run on
+          a real accelerator. Identical code path.
+
+Uses the production substrate end to end: config → synthetic pipeline →
+AdamW + cosine schedule → supervised loop with async checkpointing and
+failure recovery (see repro.launch.train for the cluster driver).
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import token_batches
+from repro.ft import StragglerMonitor, TrainSupervisor
+from repro.models.transformer import TransformerConfig, model as tm
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+PRESETS = {
+    "tiny": TransformerConfig(
+        name="tiny-lm", n_layers=4, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=384, vocab_size=2048, d_head=16,
+        param_dtype="float32", compute_dtype="float32",
+        attn_chunk_q=64, attn_chunk_kv=64,
+    ),
+    "100m": TransformerConfig(
+        name="lm-100m", n_layers=12, d_model=640, n_heads=10, n_kv_heads=2,
+        d_ff=1792, vocab_size=32000, d_head=64,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    n_params = cfg.n_params()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params)")
+
+    params = tm.init(jax.random.PRNGKey(0), cfg)
+    oc = AdamWConfig(lr=args.lr, weight_decay=0.01)
+    state = {"params": params, "opt": adamw_init(params, oc)}
+    data = token_batches(args.batch, args.seq, cfg.vocab_size, seed=1)
+    batches = [next(data) for _ in range(32)]
+
+    @jax.jit
+    def step_fn(state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: tm.loss_fn(p, batch, cfg)
+        )(state["params"])
+        lr_scale = cosine_schedule(
+            state["opt"]["step"], warmup=args.steps // 10, total=args.steps
+        )
+        p, o = adamw_update(g, state["opt"], state["params"], oc, lr_scale)
+        return {"params": p, "opt": o}, {"loss": loss}
+
+    losses = []
+    t_start = time.perf_counter()
+
+    def logged_step(state, batch):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        s = len(losses)
+        if s % 25 == 0:
+            tok_s = s * args.batch * args.seq / (time.perf_counter() - t_start)
+            print(f"step {s:4d}  loss {losses[-1]:.4f}  ({tok_s:,.0f} tok/s)")
+        return state, m
+
+    sup = TrainSupervisor(
+        logged_step,
+        lambda i: batches[i % len(batches)],
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        straggler=StragglerMonitor(),
+    )
+    state, step, metrics = sup.run(state, args.steps)
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss: {first:.3f} → {last:.3f} over {step} steps "
+          f"({'-' if last < first else '+'}{abs(first-last):.3f})")
+    assert last < first, "training did not reduce the loss"
+    print("converging ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Palgol: the paper's contribution — DSL, logic solver, compiler, runtimes.
+
+Public API:
+    parse(source)                        -> ast.Program
+    compile_program(prog, fields, graph) -> CompiledProgram (dense + bsp modes)
+    interpret(prog, fields, graph)       -> reference oracle result
+    repro.core.algorithms                -> stdlib of Palgol programs
+"""
+
+from repro.core.parser import parse
+from repro.core.compiler import compile_program
+from repro.core.interpreter import interpret
+
+__all__ = ["parse", "compile_program", "interpret"]

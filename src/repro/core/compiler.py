@@ -1,0 +1,216 @@
+"""Palgol program compilation: AST → executable JAX + STM cost models.
+
+``compile_program`` produces a :class:`CompiledProgram` whose ``fn`` is a
+pure, jit-able ``fields → (fields, trips)`` function: fixed-point iterations
+become ``lax.while_loop`` (termination via a global any-changed reduction —
+Pregel's OR aggregator), sequences compose, and the whole Palgol program
+traces into a single XLA computation. ``trips`` counts body executions per
+iteration node so the STM cost models can report superstep totals for the
+paper's Table-5 accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ast
+from repro.core import parser as palgol_parser
+from repro.core import stm as stm_mod
+from repro.core.analysis import CompileError
+from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
+
+
+def _iter_nodes(prog: ast.Prog) -> List[ast.Iter]:
+    """Pre-order list of Iter nodes — index order matches stm.build_stm."""
+    out: List[ast.Iter] = []
+
+    def go(p):
+        if isinstance(p, ast.Seq):
+            for q in p.progs:
+                go(q)
+        elif isinstance(p, ast.Iter):
+            out.append(p)
+            go(p.body)
+
+    go(prog)
+    return out
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    prog: ast.Prog
+    graph: object
+    field_struct: Dict[str, jax.ShapeDtypeStruct]
+    n_iters: int
+    max_iters: int
+    cost_models: Dict[str, stm_mod.CostModel]
+
+    def init_fields(self, user_fields: Optional[Dict[str, jax.Array]] = None):
+        """Canonical field dict: user fields + zero-init for created fields."""
+        fields = {}
+        user_fields = user_fields or {}
+        for name, sds in self.field_struct.items():
+            if name in user_fields:
+                arr = jnp.asarray(user_fields[name])
+                if arr.shape != sds.shape or arr.dtype != sds.dtype:
+                    arr = jnp.broadcast_to(arr, sds.shape).astype(sds.dtype)
+                fields[name] = arr
+            else:
+                fields[name] = jnp.zeros(sds.shape, sds.dtype)
+        for name in user_fields:
+            if name not in fields:
+                fields[name] = jnp.asarray(user_fields[name])
+        return fields
+
+    def fn(self, fields: Dict[str, jax.Array], graph=None):
+        """Pure program function: fields → (fields, trips[i32[n_iters]]).
+
+        ``graph`` overrides the compile-time graph *data* (same static
+        shape), making the graph a traced argument — required when lowering
+        against a device mesh (closure arrays would bake in as constants).
+        """
+        graph = graph if graph is not None else self.graph
+        iter_ids = {id(node): i for i, node in enumerate(_iter_nodes(self.prog))}
+        trips0 = jnp.zeros((max(self.n_iters, 1),), jnp.int32)
+
+        def run(p: ast.Prog, flds, trips):
+            if isinstance(p, ast.Step):
+                return StepExecutor(p, graph)(flds), trips
+            if isinstance(p, ast.StopStep):
+                return make_stop_fn(p, graph)(flds), trips
+            if isinstance(p, ast.Seq):
+                for q in p.progs:
+                    flds, trips = run(q, flds, trips)
+                return flds, trips
+            if isinstance(p, ast.Iter):
+                idx = iter_ids[id(p)]
+                fix = p.fix_fields
+                limit = (
+                    p.fixed_trips if p.fixed_trips is not None else self.max_iters
+                )
+
+                def cond(carry):
+                    _, _, changed, k = carry
+                    return jnp.logical_and(changed, k < limit)
+
+                def body(carry):
+                    f, t, _, k = carry
+                    new_f, t = run(p.body, f, t)
+                    if fix:
+                        changed = jnp.asarray(False)
+                        for name in fix:
+                            if name not in f:
+                                raise CompileError(
+                                    f"fix field {name!r} undefined"
+                                )
+                            changed = jnp.logical_or(
+                                changed, jnp.any(new_f[name] != f[name])
+                            )
+                    else:
+                        changed = jnp.asarray(True)  # fixed-trip iteration
+                    t = t.at[idx].add(1)
+                    return new_f, t, changed, k + 1
+
+                carry = (flds, trips, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+                flds, trips, _, _ = jax.lax.while_loop(cond, body, carry)
+                return flds, trips
+            raise CompileError(f"unknown program node {type(p).__name__}")
+
+        out_fields, trips = run(self.prog, dict(fields), trips0)
+        return out_fields, trips
+
+    def run(
+        self,
+        user_fields: Optional[Dict[str, jax.Array]] = None,
+        jit: bool = True,
+    ):
+        """Execute; returns (fields, trips, superstep counts per regime)."""
+        fields = self.init_fields(user_fields)
+        fn = jax.jit(self.fn) if jit else self.fn
+        out, trips = fn(fields)
+        trips_host = [int(x) for x in trips]
+        counts = {
+            name: cm.count(trips_host) for name, cm in self.cost_models.items()
+        }
+        return out, trips_host, counts
+
+
+def _discover_fields(prog, graph, fields_struct):
+    """eval_shape pass discovering created fields + stable dtypes."""
+
+    def step_pass(step, fs):
+        def f(flds):
+            return StepExecutor(step, graph)(flds)
+
+        return dict(jax.eval_shape(f, fs))
+
+    def stop_pass(stop, fs):
+        def f(flds):
+            return make_stop_fn(stop, graph)(flds)
+
+        return dict(jax.eval_shape(f, fs))
+
+    def go(p, fs):
+        if isinstance(p, ast.Step):
+            return step_pass(p, fs)
+        if isinstance(p, ast.StopStep):
+            return stop_pass(p, fs)
+        if isinstance(p, ast.Seq):
+            for q in p.progs:
+                fs = go(q, fs)
+            return fs
+        if isinstance(p, ast.Iter):
+            fs2 = go(p.body, fs)
+            # one more pass with the enriched struct: dtypes must be stable
+            fs3 = go(p.body, fs2)
+            if {k: (v.shape, v.dtype) for k, v in fs2.items()} != {
+                k: (v.shape, v.dtype) for k, v in fs3.items()
+            }:
+                raise CompileError(
+                    "iteration body changes field shapes/dtypes between "
+                    "iterations — not expressible as a fixed carry"
+                )
+            return fs2
+        raise CompileError(f"unknown program node {type(p).__name__}")
+
+    return go(prog, dict(fields_struct))
+
+
+def compile_program(
+    source_or_ast: Union[str, ast.Prog],
+    graph,
+    initial_fields: Optional[Dict[str, jax.Array]] = None,
+    max_iters: int = 100_000,
+) -> CompiledProgram:
+    """Compile Palgol source (or AST) against a graph.
+
+    ``initial_fields`` supplies dtypes/values of pre-existing fields; fields
+    created by the program (via ``local F[v] := ...``) are discovered with an
+    abstract-evaluation pass and zero-initialized.
+    """
+    prog = (
+        palgol_parser.parse(source_or_ast)
+        if isinstance(source_or_ast, str)
+        else source_or_ast
+    )
+    n = graph.n_vertices
+    fs: Dict[str, jax.ShapeDtypeStruct] = {
+        HALTED: jax.ShapeDtypeStruct((n,), jnp.bool_)
+    }
+    for name, arr in (initial_fields or {}).items():
+        arr = jnp.asarray(arr)
+        fs[name] = jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+    field_struct = _discover_fields(prog, graph, fs)
+    cost_models = stm_mod.superstep_report(prog)
+    return CompiledProgram(
+        prog=prog,
+        graph=graph,
+        field_struct=field_struct,
+        n_iters=len(_iter_nodes(prog)),
+        max_iters=max_iters,
+        cost_models=cost_models,
+    )

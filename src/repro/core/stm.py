@@ -1,0 +1,218 @@
+"""State-transition-machine model of compiled Palgol programs (paper §4.2–4.3).
+
+The STM is the *accounting* artifact: it records how many Pregel supersteps
+the compiled program costs, under either communication model:
+
+* ``mode="push"`` — paper-faithful: chain access via the PushSolver's
+  message-passing plans (request/reply style, minimal rounds), neighborhood
+  communication via a send superstep.
+* ``mode="pull"`` — this framework's dense execution: one-sided gather
+  rounds (pointer doubling), strictly ≤ push rounds.
+
+Optimizations modeled exactly as in the paper:
+
+* **state merging** (§4.3.1): adjacent states across a sequence boundary
+  merge because the next program's first superstep ignores incoming
+  messages (message-independence) — one superstep saved per boundary;
+* **iteration fusion** (§4.3.2): when an iteration body begins with a
+  remote-reading superstep S₁, S₁ is duplicated into the init state and
+  merged into the last body state, removing one superstep per iteration;
+* **naive mode**: both optimizations off and chain reads compiled as
+  sequential request/reply conversations — the "straightforward" compilation
+  the paper compares against (and a stand-in for typical hand-written code
+  structure).
+
+Superstep count for a run is a *linear functional* of the per-iteration trip
+counts: ``total = constant + Σ_i per_iter_i × trips_i``; ``count()`` takes
+the measured trip counts from execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core import ast
+from repro.core.analysis import analyze_step
+
+
+@dataclasses.dataclass(frozen=True)
+class State:
+    kind: str  # "read" | "main" | "update"
+    label: str = ""
+    merged: Tuple[str, ...] = ()  # labels merged into this superstep
+
+
+@dataclasses.dataclass
+class STM:
+    """Linearized STM: prefix states + loops (each with body states/trips)."""
+
+    states: List  # List[State | Loop]
+
+    def total_states(self) -> int:
+        n = 0
+        for s in self.states:
+            n += 1 if isinstance(s, State) else 0
+        return n
+
+
+@dataclasses.dataclass
+class Loop:
+    body: List[State]
+    iter_index: int  # position in the program's iteration-counter vector
+    fused: bool
+
+
+@dataclasses.dataclass
+class CostModel:
+    """total supersteps = base + Σ per_iter[i] * trips[i]."""
+
+    base: int
+    per_iter: Dict[int, int]
+    detail: List[str]
+
+    def count(self, trips: Dict[int, int] | List[int]) -> int:
+        if not isinstance(trips, dict):
+            trips = dict(enumerate(trips))
+        total = self.base
+        for i, per in self.per_iter.items():
+            total += per * int(trips.get(i, 0))
+        return total
+
+
+def _step_states(step: ast.Step, mode: str) -> List[State]:
+    info = analyze_step(step)
+    if mode == "naive":
+        # sequential request/reply per chain + separate neighborhood send
+        solver_rounds = 0
+        for p in info.chain_patterns:
+            solver_rounds += 2 * (len(p) - 1)  # query/reply per hop
+        for _, p in info.nbr_comms:
+            solver_rounds += 2 * (len(p) - 1)  # chains hanging off e.id
+        solver_rounds += 2 * info.general_reads
+        if info.nbr_comms:
+            solver_rounds += 1  # the neighborhood send superstep
+        read_rounds = solver_rounds
+    elif mode == "push":
+        read_rounds = info.push_read_rounds()
+    elif mode == "pull":
+        read_rounds = info.pull_read_rounds()
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    states = [State("read", f"rr{i}") for i in range(read_rounds)]
+    states.append(State("main", "main"))
+    if info.has_remote_writes():
+        states.append(State("update", "ru"))
+    return states
+
+
+def build_stm(
+    prog: ast.Prog, mode: str = "push", optimize: bool = True
+) -> Tuple[STM, CostModel]:
+    """Build the STM and its superstep cost model.
+
+    ``optimize=False`` gives the naive compilation (no merging/fusion,
+    request-reply chains) used as the manual-style baseline.
+    """
+    iter_counter = [0]
+
+    def build(p: ast.Prog) -> List:
+        if isinstance(p, ast.Step):
+            return list(_step_states(p, mode))
+        if isinstance(p, ast.StopStep):
+            return [State("main", "stop")]
+        if isinstance(p, ast.Seq):
+            out: List = []
+            for sub in p.progs:
+                states = build(sub)
+                if (
+                    optimize
+                    and out
+                    and states
+                    and isinstance(out[-1], State)
+                    and isinstance(states[0], State)
+                ):
+                    # §4.3.1 state merging across the sequence boundary
+                    left, right = out[-1], states[0]
+                    out[-1] = State(
+                        left.kind,
+                        left.label,
+                        merged=left.merged + (right.label,) + right.merged,
+                    )
+                    states = states[1:]
+                out.extend(states)
+            return out
+        if isinstance(p, ast.Iter):
+            body = build(p.body)
+            if any(isinstance(b, Loop) for b in body):
+                # nested iteration: keep an explicit init state, no fusion
+                idx = iter_counter[0]
+                iter_counter[0] += 1
+                return [State("main", "iter-init"), Loop(body, idx, fused=False)]
+            idx = iter_counter[0]
+            iter_counter[0] += 1
+            fused = (
+                optimize
+                and body
+                and isinstance(body[0], State)
+                and body[0].kind == "read"
+            )
+            if fused:
+                # §4.3.2: S1 duplicated into init and merged into S_n
+                s1 = body[0]
+                rest = body[1:]
+                last = rest[-1]
+                rest[-1] = State(
+                    last.kind, last.label, merged=last.merged + (s1.label,)
+                )
+                init = State("main", "iter-init", merged=(s1.label,))
+                return [init, Loop(rest, idx, fused=True)]
+            return [State("main", "iter-init"), Loop(body, idx, fused=False)]
+        raise TypeError(type(p))
+
+    flat = build(prog)
+    base = 0
+    per_iter: Dict[int, int] = {}
+    detail: List[str] = []
+
+    def account(items: List, multiplier_key=None):
+        nonlocal base
+        for it in items:
+            if isinstance(it, State):
+                if multiplier_key is None:
+                    base += 1
+                else:
+                    per_iter[multiplier_key] = per_iter.get(multiplier_key, 0) + 1
+            else:  # Loop
+                assert multiplier_key is None or True
+                # nested loops: attribute inner states to the inner counter
+                account(it.body, it.iter_index)
+
+    account(flat)
+    stm = STM(flat)
+    for it in flat:
+        if isinstance(it, Loop):
+            detail.append(
+                f"loop#{it.iter_index}: {len([s for s in it.body if isinstance(s, State)])}"
+                f" supersteps/iter (fused={it.fused})"
+            )
+    return stm, CostModel(base, per_iter, detail)
+
+
+def superstep_report(prog: ast.Prog) -> Dict[str, CostModel]:
+    """Cost models under the compilation regimes.
+
+    * ``palgol_push``  — paper-faithful compiler output (logic-system chain
+      plans, state merging, iteration fusion);
+    * ``palgol_pull``  — this framework's dense schedule (gather staging);
+    * ``pull_staged``  — pull schedule without merging/fusion (matches the
+      staged BSP executor's actually-executed count);
+    * ``naive``        — request/reply chains, no merging/fusion (the
+      "straightforward"/manual baseline the paper compares against).
+    """
+    return {
+        "palgol_push": build_stm(prog, "push", optimize=True)[1],
+        "palgol_pull": build_stm(prog, "pull", optimize=True)[1],
+        "pull_staged": build_stm(prog, "pull", optimize=False)[1],
+        "naive": build_stm(prog, "naive", optimize=False)[1],
+    }

@@ -1,0 +1,13 @@
+from repro.data.pipeline import (
+    token_batches,
+    recsys_batches,
+    gnn_full_batch,
+    gnn_minibatches,
+)
+
+__all__ = [
+    "token_batches",
+    "recsys_batches",
+    "gnn_full_batch",
+    "gnn_minibatches",
+]

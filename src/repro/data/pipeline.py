@@ -1,0 +1,148 @@
+"""Synthetic data pipelines (deterministic, shard-aware).
+
+Production deployments replace these generators with storage readers; the
+iterator contract (yield pytrees matching ``input_specs``) and the host→device
+sharded placement stay the same. Each generator is seeded and cheap enough
+to run on the host while the previous step executes (software pipelining —
+the input-pipeline half of compute/IO overlap).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import generators as G
+from repro.graph.sampler import CSR, sample_khop
+
+
+def _put(tree, shardings=None):
+    if shardings is None:
+        return tree
+    return jax.device_put(tree, shardings)
+
+
+def token_batches(
+    batch: int,
+    seq_len: int,
+    vocab: int,
+    seed: int = 0,
+    shardings=None,
+) -> Iterator[dict]:
+    """LM batches: next-token labels over a synthetic Zipf token stream."""
+    rng = np.random.default_rng(seed)
+    while True:
+        # Zipf-ish distribution to give the embedding gather realistic skew
+        z = rng.zipf(1.3, size=(batch, seq_len + 1)) % vocab
+        toks = z.astype(np.int32)
+        yield _put(
+            {
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:]),
+            },
+            shardings,
+        )
+
+
+def recsys_batches(
+    batch: int,
+    n_fields: int,
+    vocab: int,
+    seed: int = 0,
+    shardings=None,
+) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        fields = rng.zipf(1.2, size=(batch, n_fields)) % vocab
+        # synthetic CTR signal: depends on a few field hashes
+        logit = ((fields[:, 0] + fields[:, 1]) % 7 - 3) * 0.7
+        labels = (rng.random(batch) < 1 / (1 + np.exp(-logit))).astype(np.float32)
+        yield _put(
+            {
+                "fields": jnp.asarray(fields.astype(np.int32)),
+                "labels": jnp.asarray(labels),
+            },
+            shardings,
+        )
+
+
+def gnn_full_batch(
+    n_nodes: int,
+    avg_degree: float,
+    d_feat: int,
+    n_classes: int,
+    seed: int = 0,
+    task: str = "node_class",
+    n_out: int = 0,
+    shardings=None,
+) -> dict:
+    """One full-graph batch from an RMAT generator."""
+    import math
+
+    g = G.rmat(
+        max(2, int(math.ceil(math.log2(max(n_nodes, 2))))),
+        avg_degree=avg_degree,
+        directed=False,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    n = g.n_vertices
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(n, d_feat)).astype(np.float32)),
+        "src": g.src,
+        "dst": g.dst,
+        "emask": g.edge_mask,
+    }
+    if task == "regression":
+        batch["labels"] = jnp.asarray(
+            rng.normal(size=(n, n_out)).astype(np.float32)
+        )
+        batch["lmask"] = jnp.ones((n,), jnp.float32)
+    else:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, n_classes, size=n).astype(np.int32)
+        )
+        batch["lmask"] = jnp.asarray(
+            (rng.random(n) < 0.5).astype(np.float32)
+        )
+    return _put(batch, shardings)
+
+
+def gnn_minibatches(
+    graph,
+    features: jax.Array,
+    labels: jax.Array,
+    batch_nodes: int,
+    fanouts,
+    seed: int = 0,
+    shardings=None,
+) -> Iterator[dict]:
+    """Sampled GraphSAGE minibatches using the real neighbor sampler."""
+    csr = CSR.from_graph(graph)
+    key = jax.random.PRNGKey(seed)
+    n = graph.n_vertices
+    sentinel_feat = jnp.zeros((1, features.shape[1]), features.dtype)
+    feats_ext = jnp.concatenate([features, sentinel_feat], axis=0)
+    while True:
+        key, k1, k2 = jax.random.split(key, 3)
+        seeds = jax.random.randint(k1, (batch_nodes,), 0, n)
+        blocks = sample_khop(csr, seeds, fanouts, k2)
+        b0, b1 = blocks
+        yield _put(
+            {
+                "seed_x": jnp.take(feats_ext, seeds, axis=0),
+                "hop0_x": jnp.take(
+                    feats_ext, b0.neighbors.reshape(-1), axis=0
+                ),
+                "hop0_mask": b0.mask,
+                "hop1_x": jnp.take(
+                    feats_ext, b1.neighbors.reshape(-1), axis=0
+                ),
+                "hop1_mask": b1.mask,
+                "labels": jnp.take(labels, seeds, axis=0),
+            },
+            shardings,
+        )

@@ -1,0 +1,7 @@
+from repro.ft.failures import (
+    FailureInjector,
+    StragglerMonitor,
+    TrainSupervisor,
+)
+
+__all__ = ["FailureInjector", "StragglerMonitor", "TrainSupervisor"]

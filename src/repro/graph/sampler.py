@@ -1,0 +1,112 @@
+"""k-hop uniform neighbor sampler (GraphSAGE-style minibatch training).
+
+``minibatch_lg`` requires a real sampler: given seed nodes and per-hop
+fanouts, draw uniform neighbor samples from the CSR adjacency and emit a
+*padded, statically-shaped* sampled block per hop — the shape contract the
+pjit'd train step is lowered against.
+
+Zero-degree nodes sample the sentinel (== n_vertices) with mask False; the
+model's segment ops drop those rows. Sampling runs in JAX (jit-able, runs on
+host CPU in the input pipeline at deployment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SampledBlock:
+    """One hop of sampled neighborhood.
+
+    ``nodes``:   i32[B]            destination nodes of this hop
+    ``neighbors``: i32[B, fanout]  sampled in-neighbors (sentinel-padded)
+    ``mask``:    bool[B, fanout]
+    """
+
+    nodes: jax.Array
+    neighbors: jax.Array
+    mask: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Host-built CSR adjacency (in-neighbors)."""
+
+    indptr: jax.Array  # i32[N+1]
+    indices: jax.Array  # i32[nnz]
+    n_vertices: int
+
+    @staticmethod
+    def from_graph(graph) -> "CSR":
+        dst = np.asarray(graph.dst)
+        src = np.asarray(graph.src)
+        m = np.asarray(graph.edge_mask)
+        dst, src = dst[m], src[m]
+        order = np.argsort(dst, kind="stable")
+        dst, src = dst[order], src[order]
+        counts = np.bincount(dst, minlength=graph.n_vertices)
+        indptr = np.zeros(graph.n_vertices + 1, np.int32)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(jnp.asarray(indptr), jnp.asarray(src.astype(np.int32)),
+                   graph.n_vertices)
+
+
+def sample_neighbors(csr: CSR, nodes: jax.Array, fanout: int, key) -> SampledBlock:
+    """Uniform-with-replacement sample of ``fanout`` in-neighbors per node."""
+    start = csr.indptr[nodes]
+    degree = csr.indptr[nodes + 1] - start
+    r = jax.random.randint(key, (nodes.shape[0], fanout), 0, jnp.maximum(degree, 1)[:, None])
+    idx = start[:, None] + r
+    neighbors = jnp.take(csr.indices, idx, mode="clip")
+    mask = degree[:, None] > 0
+    mask = jnp.broadcast_to(mask, neighbors.shape)
+    neighbors = jnp.where(mask, neighbors, csr.n_vertices)
+    return SampledBlock(nodes=nodes, neighbors=neighbors, mask=mask)
+
+
+def sample_khop(csr: CSR, seeds: jax.Array, fanouts: Sequence[int], key):
+    """Multi-hop sampling: returns one SampledBlock per hop, innermost last.
+
+    Hop ``i`` samples ``fanouts[i]`` neighbors for every frontier node; the
+    next frontier is the flattened neighbor set (with replacement — standard
+    GraphSAGE). Output shapes are fully static:
+      hop0: nodes [B],      neighbors [B, f0]
+      hop1: nodes [B*f0],   neighbors [B*f0, f1]
+      ...
+    """
+    blocks = []
+    frontier = seeds
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        # clamp sentinel frontier entries into range for indptr lookup
+        safe = jnp.minimum(frontier, csr.n_vertices - 1)
+        blk = sample_neighbors(csr, safe, f, sub)
+        # frontier rows that were sentinels must not contribute: kill mask
+        alive = (frontier < csr.n_vertices)[:, None]
+        blk = SampledBlock(
+            nodes=frontier,
+            neighbors=jnp.where(alive, blk.neighbors, csr.n_vertices),
+            mask=blk.mask & alive,
+        )
+        blocks.append(blk)
+        frontier = blk.neighbors.reshape(-1)
+    return blocks
+
+
+def sampled_input_shapes(batch_nodes: int, fanouts: Sequence[int], d_feat: int):
+    """ShapeDtypeStructs for a sampled minibatch (used by the dry-run)."""
+    shapes = {}
+    b = batch_nodes
+    shapes["seed_feats"] = jax.ShapeDtypeStruct((b, d_feat), jnp.float32)
+    for i, f in enumerate(fanouts):
+        shapes[f"hop{i}_feats"] = jax.ShapeDtypeStruct((b * f, d_feat), jnp.float32)
+        shapes[f"hop{i}_mask"] = jax.ShapeDtypeStruct((b, f), jnp.bool_)
+        b = b * f
+    return shapes

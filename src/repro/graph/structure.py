@@ -1,0 +1,168 @@
+"""Dense, statically-shaped graph representation.
+
+Pregel stores per-vertex adjacency lists; on TPU we use a struct-of-arrays
+sorted-COO layout (``src``, ``dst``, ``weight``) padded to a static edge count,
+plus an explicit validity mask. Edges are stored sorted by ``dst`` so that
+"receive messages along incoming edges" is a sorted segment reduction (the
+MXU-friendly hot path); the transpose ordering (sorted by ``src``) is
+maintained lazily for algorithms that push along outgoing edges.
+
+Conventions
+-----------
+* An edge ``(src[i], dst[i])`` means: ``dst[i]`` can *pull* data from
+  ``src[i]`` (i.e. ``src[i]`` is an in-neighbor of ``dst[i]``). For Palgol's
+  ``In[v]`` the neighbor id ``e.id`` is ``src``; for ``Out[v]`` we use the
+  transposed arrays; for undirected ``Nbr[v]`` the edge list must be
+  symmetric (see :func:`symmetrize`) and ``In``/``Out`` coincide.
+* Padding edges carry ``src = dst = n_vertices`` (an out-of-range sentinel)
+  and ``mask = False``. All consumers either segment-reduce with explicit
+  ``num_segments=n_vertices`` (sentinel rows are dropped by scatter's
+  ``mode="drop"``) or mask messages to the combiner identity first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Static-shape graph. ``n_vertices``/``n_edges`` are trace-static."""
+
+    # --- data (pytree leaves) ---
+    src: jax.Array  # i32[E]  edge source, sorted by dst
+    dst: jax.Array  # i32[E]  edge destination (ascending)
+    weight: jax.Array  # f32[E] edge weight (1.0 if unweighted)
+    edge_mask: jax.Array  # bool[E] False on padding rows
+    # transpose ordering (sorted by src) for push-style traversal
+    t_src: jax.Array  # i32[E]
+    t_dst: jax.Array  # i32[E]
+    t_weight: jax.Array  # f32[E]
+    t_mask: jax.Array  # bool[E]
+
+    # --- static metadata ---
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_vertices
+
+    def in_edges(self):
+        """(neighbor_id, self_id, weight, mask) for pull-along-In traversal."""
+        return self.src, self.dst, self.weight, self.edge_mask
+
+    def out_edges(self):
+        """(neighbor_id, self_id, weight, mask) for traversal of Out[v].
+
+        For ``Out[v]`` the "current vertex" is the edge *source*; the
+        neighbor (``e.id``) is the destination. We return the transposed
+        arrays so the segment key (second element) is sorted.
+        """
+        return self.t_dst, self.t_src, self.t_weight, self.t_mask
+
+    def edges(self, direction: str):
+        if direction in ("in", "nbr"):
+            return self.in_edges()
+        if direction == "out":
+            return self.out_edges()
+        raise ValueError(f"unknown edge direction {direction!r}")
+
+
+def _sort_by(key: np.ndarray, *arrays: np.ndarray):
+    order = np.argsort(key, kind="stable")
+    return tuple(a[order] for a in arrays)
+
+
+def from_edge_list(
+    src,
+    dst,
+    n_vertices: int,
+    weight=None,
+    pad_to: Optional[int] = None,
+) -> Graph:
+    """Build a :class:`Graph` from host-side edge arrays.
+
+    This runs on host (numpy) at graph-construction time; the result is a
+    pytree of device arrays. ``pad_to`` rounds the edge count up to a static
+    size (useful to keep recompilation away when streaming graphs).
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if weight is None:
+        weight = np.ones(src.shape, dtype=np.float32)
+    weight = np.asarray(weight, dtype=np.float32)
+    if src.shape != dst.shape or src.shape != weight.shape:
+        raise ValueError("src/dst/weight must have identical shapes")
+    if src.ndim != 1:
+        raise ValueError("edge arrays must be rank-1")
+    e = src.shape[0]
+    n_edges = int(pad_to) if pad_to is not None else e
+    if n_edges < e:
+        raise ValueError(f"pad_to={pad_to} smaller than edge count {e}")
+
+    sentinel = n_vertices
+    pad = n_edges - e
+    src_p = np.concatenate([src, np.full((pad,), sentinel, np.int32)])
+    dst_p = np.concatenate([dst, np.full((pad,), sentinel, np.int32)])
+    w_p = np.concatenate([weight, np.zeros((pad,), np.float32)])
+    mask_p = np.concatenate([np.ones((e,), bool), np.zeros((pad,), bool)])
+
+    # pull ordering: sorted by dst
+    dst_s, src_s, w_s, m_s = _sort_by(dst_p, dst_p, src_p, w_p, mask_p)
+    # push ordering: sorted by src
+    tsrc_s, tdst_s, tw_s, tm_s = _sort_by(src_p, src_p, dst_p, w_p, mask_p)
+
+    return Graph(
+        src=jnp.asarray(src_s),
+        dst=jnp.asarray(dst_s),
+        weight=jnp.asarray(w_s),
+        edge_mask=jnp.asarray(m_s),
+        t_src=jnp.asarray(tsrc_s),
+        t_dst=jnp.asarray(tdst_s),
+        t_weight=jnp.asarray(tw_s),
+        t_mask=jnp.asarray(tm_s),
+        n_vertices=int(n_vertices),
+        n_edges=int(n_edges),
+    )
+
+
+def symmetrize(src, dst, weight=None):
+    """Host-side: return the symmetric closure of an edge list (deduplicated).
+
+    Palgol's ``Nbr`` field assumes every undirected edge is stored on both
+    endpoints; the compiler relies on this symmetry (paper §3.2).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if weight is None:
+        weight = np.ones(src.shape, dtype=np.float32)
+    weight = np.asarray(weight, dtype=np.float32)
+    a = np.concatenate([src, dst])
+    b = np.concatenate([dst, src])
+    w = np.concatenate([weight, weight])
+    # dedup parallel edges, keep first weight
+    key = a * (max(int(b.max(initial=0)) + 1, 1)) + b
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    return a[idx].astype(np.int32), b[idx].astype(np.int32), w[idx]
+
+
+def pad_edges(graph: Graph, n_edges: int) -> Graph:
+    """Re-pad a graph to a larger static edge count (host-side)."""
+    if n_edges < graph.n_edges:
+        raise ValueError("cannot shrink edge array")
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    w = np.asarray(graph.weight)
+    m = np.asarray(graph.edge_mask)
+    keep = m
+    return from_edge_list(
+        src[keep], dst[keep], graph.n_vertices, w[keep], pad_to=n_edges
+    )

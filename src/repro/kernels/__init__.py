@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has three files:
+  kernel.py — ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd wrapper (padding, layout, fallback paths)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels (all validated in interpret mode on CPU; TPU is the target):
+  flash_attention — online-softmax attention (causal/SWA/GQA), the hot spot
+                    of every LM cell;
+  segment_reduce  — blocked-ELL one-hot-matmul segment sum: the Pregel
+                    message combiner / GNN aggregation hot spot, recast as
+                    MXU matmuls instead of scatters (the paper's combiner
+                    concept, §4.4, in TPU form);
+  embedding_bag   — scalar-prefetch gather-reduce over huge vocab tables
+                    (recsys lookup hot path);
+  gather_rows     — chain-access row gather (Palgol remote reads).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.embedding_bag.ops import embedding_bag_pallas
+
+__all__ = ["embedding_bag_pallas"]

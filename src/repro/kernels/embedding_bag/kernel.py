@@ -1,0 +1,68 @@
+"""EmbeddingBag kernel (TPU Pallas, scalar-prefetch row gather).
+
+The recsys lookup hot path: bags of ``H`` indices into a huge ``[V, D]``
+table, sum-reduced per bag. JAX has no native EmbeddingBag; the XLA fallback
+is gather + reshape + reduce. This kernel instead uses
+``PrefetchScalarGridSpec``: the (small) index array is prefetched to SMEM,
+and each grid step's BlockSpec ``index_map`` *reads the prefetched index* to
+stream exactly one table row HBM→VMEM — no [B, H, D] gather intermediate is
+ever materialized, and rows for the next step are double-buffered by the
+Pallas pipeline while the current row accumulates.
+
+Grid: (B, H), bag dim outer, hot-index dim inner; a [1, D] f32 scratch
+accumulates across H and writes the bag's output row once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, w_ref, table_ref, o_ref, acc_ref, *, n_hot):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    weight = w_ref[b, h]
+    acc_ref[...] += table_ref[...].astype(jnp.float32) * weight
+
+    @pl.when(h == n_hot - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def embedding_bag_kernel(
+    table: jax.Array,  # [V, D]
+    indices: jax.Array,  # [B, H] int32
+    weights: jax.Array,  # [B, H] (0.0 masks a slot)
+    interpret: bool = False,
+) -> jax.Array:
+    b, h = indices.shape
+    v, d = table.shape
+    kernel = functools.partial(_bag_kernel, n_hot=h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i, j, idx: (i, 0)),  # weights row
+            pl.BlockSpec(  # one table row, chosen by the prefetched index
+                (1, d), lambda i, j, idx: (idx[i, j], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(indices, weights, table)

@@ -1,0 +1,35 @@
+"""jit'd wrapper: lane padding + default weights for the bag kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(
+    table: jax.Array,  # [V, D]
+    indices: jax.Array,  # [B, H]
+    weights=None,  # [B, H] or None
+    mask=None,  # [B, H] bool or None
+    interpret: bool = False,
+) -> jax.Array:
+    v, d = table.shape
+    b, h = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, h), table.dtype)
+    if mask is not None:
+        weights = weights * mask.astype(weights.dtype)
+    # lane-pad D to a multiple of 128 (TPU VMEM tile width)
+    pd = (-d) % 128
+    if pd:
+        table = jnp.pad(table, ((0, 0), (0, pd)))
+    out = embedding_bag_kernel(
+        table, indices.astype(jnp.int32), weights.astype(table.dtype),
+        interpret=interpret,
+    )
+    return out[:, :d]

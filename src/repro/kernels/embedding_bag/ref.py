@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the embedding_bag kernel."""
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights):
+    vals = jnp.take(table, indices, axis=0, mode="clip")  # [B, H, D]
+    return jnp.sum(vals * weights[..., None].astype(vals.dtype), axis=1)

@@ -1,0 +1,152 @@
+"""FlashAttention forward kernel (TPU Pallas).
+
+Layout: q [BH, Sq, D], k/v [BHkv, Sk, D] (heads flattened into the leading
+dim; the ops wrapper transposes from the model's [B, S, H, D]).
+
+Grid: (BH, Sq/bq, Sk/bk) — the KV dimension is innermost (sequential), so
+the online-softmax state (m, l, acc) lives in VMEM scratch across KV steps
+and the output block is written once on the last KV step. Causal and
+sliding-window masks are applied from block-relative iota positions; fully
+masked blocks skip the matmuls entirely (``pl.when``), which on TPU skips
+the HBM→VMEM prefetch of the dead block too.
+
+VMEM working set per step: bq·D (q) + 2·bk·D (k,v) + bq·bk (scores)
++ bq·(D+2) f32 scratch — with bq=bk=512, D=128, bf16: ~0.9 MB, well inside
+the ~16 MB VMEM budget, leaving room for double buffering. Both matmuls
+contract over 128-multiples (MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [1, bq, D]
+    k_ref,  # [1, bk, D]
+    v_ref,  # [1, bk, D]
+    o_ref,  # [1, bq, D]
+    acc_ref,  # [bq, D] f32 scratch
+    m_ref,  # [bq, 128] f32 scratch (lane-padded)
+    l_ref,  # [bq, 128] f32 scratch
+    *,
+    causal: bool,
+    window,
+    bq: int,
+    bk: int,
+    n_k: int,
+    sk_valid: int,
+):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * bq
+    k_start = j * bk
+    # block-level reachability: skip fully-masked blocks
+    live = True
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]  # [bq, D]
+        k = k_ref[0]  # [bk, D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < sk_valid  # padding KVs
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, D]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        norm = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = (acc_ref[...] * norm[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BHkv, Sk, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    sk_valid: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    n_rep = bh // bhkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    n_k = sk // bk
+    sk_valid = sk_valid or sk
+
+    grid = (bh, sq // bq, n_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        n_k=n_k,
+        sk_valid=sk_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, _n=n_rep: (h // _n, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, _n=n_rep: (h // _n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""jit'd wrapper: model layout + padding + GQA for the flash kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    window=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    pq = (-sq) % bq
+    pk = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_fwd(
+        qp.reshape(b * h, sq + pq, d),
+        kp.reshape(b * hkv, sk + pk, d),
+        vp.reshape(b * hkv, sk + pk, d),
+        causal=causal,
+        window=window,
+        sk_valid=sk,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, sq + pq, d)[:, :, :sq]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    window=None,
+    sk_valid=None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    n_rep = h // hkv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if sk_valid is not None:
+        ok &= kpos < sk_valid
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    # rows with no valid keys produce 0 (matching the kernel's l==0 guard)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

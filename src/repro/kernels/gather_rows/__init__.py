@@ -1,0 +1,3 @@
+from repro.kernels.gather_rows.ops import gather_rows_pallas
+
+__all__ = ["gather_rows_pallas"]

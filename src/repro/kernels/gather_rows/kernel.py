@@ -1,0 +1,39 @@
+"""Row-gather kernel (TPU Pallas, scalar-prefetch).
+
+The Palgol chain-access primitive: ``out[i] = table[idx[i]]``. One grid step
+per output block row; the BlockSpec index_map reads the prefetched index so
+the pipeline streams exactly the referenced rows HBM→VMEM (one-sided remote
+read — the pull-mode schedule of core/logic.py at the kernel level).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, row_ref, o_ref):
+    o_ref[...] = row_ref[...]
+
+
+def gather_rows_kernel(
+    table: jax.Array,  # [V, D]
+    idx: jax.Array,  # [N] int32
+    interpret: bool = False,
+) -> jax.Array:
+    n = idx.shape[0]
+    v, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for gather_rows (lane padding + clipping)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_rows.kernel import gather_rows_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_pallas(table, idx, interpret: bool = False):
+    v, d = table.shape
+    pd = (-d) % 128
+    if pd:
+        table = jnp.pad(table, ((0, 0), (0, pd)))
+    idx = jnp.clip(idx.astype(jnp.int32), 0, v - 1)
+    out = gather_rows_kernel(table, idx, interpret=interpret)
+    return out[:, :d]

@@ -1,0 +1,3 @@
+from repro.kernels.segment_reduce.ops import segment_sum_ell
+
+__all__ = ["segment_sum_ell"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the segment_reduce kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(values, segment_ids, num_segments, mask=None):
+    if mask is not None:
+        values = jnp.where(mask[:, None], values, 0)
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)

@@ -1,0 +1,12 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys.
+
+All models follow the same functional contract:
+
+* ``init(key, cfg)``/``abstract_params(cfg)`` — parameter pytree (nested
+  dicts of arrays / ShapeDtypeStructs; layer-stacked along a leading axis
+  for ``lax.scan``);
+* ``loss_fn(params, batch, cfg)`` — scalar loss (training);
+* ``forward``/``prefill``/``decode_step`` as the family dictates;
+* ``input_specs(cfg, shape)`` — ShapeDtypeStructs for the dry-run;
+* sharding rules live in ``repro.dist.sharding`` keyed by param path.
+"""

@@ -1,0 +1,4 @@
+from repro.models.gnn.config import GNNConfig
+from repro.models.gnn import models
+
+__all__ = ["GNNConfig", "models"]

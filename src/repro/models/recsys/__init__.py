@@ -1,0 +1,4 @@
+from repro.models.recsys.config import AutoIntConfig
+from repro.models.recsys import autoint, embedding
+
+__all__ = ["AutoIntConfig", "autoint", "embedding"]

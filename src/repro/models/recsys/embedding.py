@@ -1,0 +1,80 @@
+"""EmbeddingBag — JAX has no native one; built from take + segment_sum.
+
+Two layouts:
+* fixed-width bags  [B, H] indices (+ optional weights): gather + masked
+  reduce along H — the vectorized TPU-friendly form;
+* ragged bags       flat indices [T] + bag offsets — gather + segment_sum
+  (torch ``nn.EmbeddingBag``-equivalent semantics).
+
+The Pallas kernel ``repro.kernels.embedding_bag`` accelerates the
+fixed-width form with scalar-prefetch row gathering.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import ops as gops
+
+
+def embedding_bag(
+    table: jax.Array,  # [V, D]
+    indices: jax.Array,  # [B, H]
+    weights: Optional[jax.Array] = None,  # [B, H]
+    mask: Optional[jax.Array] = None,  # [B, H]
+    mode: str = "sum",
+) -> jax.Array:
+    """Fixed-width multi-hot bag lookup → [B, D]."""
+    vals = jnp.take(table, indices, axis=0, mode="clip")  # [B, H, D]
+    if weights is not None:
+        vals = vals * weights[..., None].astype(vals.dtype)
+    if mask is not None:
+        vals = vals * mask[..., None].astype(vals.dtype)
+    if mode == "sum":
+        return jnp.sum(vals, axis=1)
+    if mode == "mean":
+        denom = (
+            jnp.sum(mask, axis=1, keepdims=True).astype(vals.dtype)
+            if mask is not None
+            else jnp.asarray(indices.shape[1], vals.dtype)
+        )
+        return jnp.sum(vals, axis=1) / jnp.maximum(denom, 1.0)
+    if mode == "max":
+        if mask is not None:
+            vals = jnp.where(mask[..., None], vals, -jnp.inf)
+        out = jnp.max(vals, axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(
+    table: jax.Array,  # [V, D]
+    flat_indices: jax.Array,  # [T]
+    bag_ids: jax.Array,  # [T]  (sorted bag id per index)
+    n_bags: int,
+    weights: Optional[jax.Array] = None,  # [T]
+    mode: str = "sum",
+) -> jax.Array:
+    """Ragged bag lookup (CSR-offsets style) → [n_bags, D]."""
+    vals = jnp.take(table, flat_indices, axis=0, mode="clip")  # [T, D]
+    if weights is not None:
+        vals = vals * weights[:, None].astype(vals.dtype)
+    if mode == "sum":
+        return gops.segment_reduce(vals, bag_ids, n_bags, "sum",
+                                   indices_are_sorted=True)
+    if mode == "mean":
+        s = gops.segment_reduce(vals, bag_ids, n_bags, "sum",
+                                indices_are_sorted=True)
+        cnt = gops.segment_reduce(
+            jnp.ones_like(flat_indices, vals.dtype), bag_ids, n_bags, "sum",
+            indices_are_sorted=True,
+        )
+        return s / jnp.maximum(cnt[:, None], 1.0)
+    if mode == "max":
+        out = gops.segment_reduce(vals, bag_ids, n_bags, "max",
+                                  indices_are_sorted=True)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)

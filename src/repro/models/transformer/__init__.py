@@ -1,0 +1,4 @@
+from repro.models.transformer.config import MoEConfig, TransformerConfig
+from repro.models.transformer import model
+
+__all__ = ["TransformerConfig", "MoEConfig", "model"]

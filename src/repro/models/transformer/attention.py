@@ -1,0 +1,260 @@
+"""Attention: GQA + RoPE + qk-norm + sliding window; dense & chunked impls.
+
+The chunked implementation is the pure-JAX flash-attention analogue (online
+softmax over KV chunks via ``lax.scan``) — O(S·chunk) memory instead of
+O(S²), required for ``prefill_32k``. The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU-optimized version of the same
+contraction; this module is its reference semantics and the GSPMD-partitioned
+fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, Dh] → [B, S, Hkv*n_rep, Dh] (GQA broadcast)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias [..., Sq, Sk] from position vectors."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]  # q - k
+    ok = jnp.ones(diff.shape, jnp.bool_)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_dense(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, Hkv, Dh]
+    v: jax.Array,  # [B, Sk, Hkv, Dh]
+    q_pos: jax.Array,  # [B, Sq] or [Sq]
+    k_pos: jax.Array,  # [B, Sk] or [Sk]
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_mask: Optional[jax.Array] = None,  # [B, Sk] valid-KV mask (decode)
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    n_rep = h // k.shape[2]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = dh**-0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    bias = _mask_bias(q_pos[:, None, :], k_pos[:, None, :], causal, window)
+    logits = logits + bias
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk_q: int = 1024,  # kept for API compat; q stays unchunked
+    chunk_kv: int = 1024,
+    kv_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Flash-style attention: online softmax over KV chunks, custom VJP.
+
+    Memory is O(Sq × chunk_kv) for the running block instead of O(Sq × Sk);
+    the backward pass recomputes per-chunk probabilities from the saved
+    logsumexp (standard FlashAttention recomputation), so nothing O(S²) is
+    ever materialized — this is the GSPMD-partitioned reference semantics of
+    the Pallas ``flash_attention`` kernel.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    chunk_kv = min(chunk_kv, sk)
+    pk = (-sk) % chunk_kv
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (b, sq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (b, sk))
+    if kv_mask is None:
+        kv_mask = jnp.ones((b, sk), jnp.bool_)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)))
+        kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pk)))
+    out = _flash(q, k, v, q_pos, k_pos, kv_mask, causal, window, chunk_kv)
+    return out
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _flash(q, k, v, q_pos, k_pos, kv_mask, causal, window, chunk_kv):
+    out, _ = _flash_fwd_impl(
+        q, k, v, q_pos, k_pos, kv_mask, causal, window, chunk_kv
+    )
+    return out
+
+
+def _chunked(x, ck):
+    # [b, sk, ...] -> [nk, b, ck, ...]
+    b, sk = x.shape[:2]
+    return jnp.moveaxis(x.reshape((b, sk // ck, ck) + x.shape[2:]), 1, 0)
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, kv_mask, causal, window, ck):
+    b, sq, h, dh = q.shape
+    n_rep = h // k.shape[2]
+    scale = dh**-0.5
+
+    def kv_step(carry, kv):
+        acc, m, l = carry
+        ki, vi, kpi, kmi = kv
+        ki = repeat_kv(ki, n_rep)
+        vi = repeat_kv(vi, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, ki).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos[:, None, :], kpi[:, None, :], causal, window)
+        s = jnp.where(kmi[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vi
+        ).astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        kv_step,
+        (acc0, m0, l0),
+        (_chunked(k, ck), _chunked(v, ck), _chunked(k_pos, ck),
+         _chunked(kv_mask, ck)),
+    )
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    out = jnp.transpose(out, (0, 2, 1, 3))  # [b, sq, h, dh]
+    lse = m + jnp.log(l_safe)  # [b, h, sq]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, kv_mask, causal, window, ck):
+    out, lse = _flash_fwd_impl(
+        q, k, v, q_pos, k_pos, kv_mask, causal, window, ck
+    )
+    return out, (q, k, v, q_pos, k_pos, kv_mask, out, lse)
+
+
+def _flash_bwd(causal, window, ck, res, g):
+    q, k, v, q_pos, k_pos, kv_mask, out, lse = res
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    n_rep = h // hkv
+    scale = dh**-0.5
+    g = g.astype(jnp.float32)  # [b, sq, h, dh]
+    gt = jnp.transpose(g, (0, 2, 1, 3))  # [b, h, sq, dh]
+    out_t = jnp.transpose(out.astype(jnp.float32), (0, 2, 1, 3))
+    delta = jnp.sum(gt * out_t, axis=-1)  # [b, h, sq]
+
+    def kv_step(dq_acc, kv):
+        ki, vi, kpi, kmi = kv  # [b, ck, hkv, dh], ...
+        kr = repeat_kv(ki, n_rep)
+        vr = repeat_kv(vi, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos[:, None, :], kpi[:, None, :], causal, window)
+        s = jnp.where(kmi[:, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # [b, h, sq, ck]
+        dv_r = jnp.einsum("bhqk,bhqd->bkhd", p, gt)  # [b, ck, h, dh]
+        dp = jnp.einsum("bhqd,bkhd->bhqk", gt, vr.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale  # [b, h, sq, ck]
+        dq_c = jnp.einsum("bhqk,bkhd->bqhd", ds, kr.astype(jnp.float32))
+        dk_r = jnp.einsum("bhqk,bqhd->bkhd", ds, q.astype(jnp.float32))
+        # fold GQA head groups back onto the kv heads
+        dv_i = dv_r.reshape(b, ki.shape[1], hkv, n_rep, dh).sum(3)
+        dk_i = dk_r.reshape(b, ki.shape[1], hkv, n_rep, dh).sum(3)
+        return dq_acc + dq_c, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    dq, (dk_chunks, dv_chunks) = jax.lax.scan(
+        kv_step,
+        dq0,
+        (_chunked(k, ck), _chunked(v, ck), _chunked(k_pos, ck),
+         _chunked(kv_mask, ck)),
+    )
+    sk = k.shape[1]
+    dk = jnp.moveaxis(dk_chunks, 0, 1).reshape(b, sk, hkv, dh)
+    dv = jnp.moveaxis(dv_chunks, 0, 1).reshape(b, sk, hkv, dh)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (
+        dq.astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        f0(q_pos),
+        f0(k_pos),
+        f0(kv_mask),
+    )
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+import numpy as np  # noqa: E402
+
+
+def attention(q, k, v, q_pos, k_pos, cfg, causal=True, kv_mask=None):
+    window = cfg.swa_window
+    if cfg.attn_impl == "dense" or q.shape[1] == 1:
+        return attention_dense(
+            q, k, v, q_pos, k_pos, causal=causal, window=window, kv_mask=kv_mask
+        )
+    return attention_chunked(
+        q,
+        k,
+        v,
+        q_pos,
+        k_pos,
+        causal=causal,
+        window=window,
+        chunk_q=cfg.attn_chunk_q,
+        chunk_kv=cfg.attn_chunk_kv,
+        kv_mask=kv_mask,
+    )

@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, warmup: int = 100, total: int = 10_000,
+                    min_ratio: float = 0.1):
+    """Linear warmup → cosine decay to ``min_ratio``; returns a scale in
+    (0, 1] multiplying the base LR."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return warm * (min_ratio + (1 - min_ratio) * cos)

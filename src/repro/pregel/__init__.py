@@ -1,0 +1,15 @@
+"""Pregel BSP runtime: superstep-by-superstep execution of compiled Palgol.
+
+The dense executor (repro.core.codegen) fuses a whole Palgol program into one
+XLA computation — the production path. This package provides the *staged*
+executor that dispatches one device computation per Pregel superstep with a
+host-side barrier between them (the shape of a real Pregel system), used for
+
+* validating the STM superstep accounting against actually-executed steps,
+* the Table-4-style execution-time comparison (fused Palgol output vs the
+  naive/manual compilation with request-reply chains and no merging/fusion).
+"""
+
+from repro.pregel.runtime import run_bsp, BSPResult
+
+__all__ = ["run_bsp", "BSPResult"]

@@ -1,0 +1,167 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute 197 TFLOP/s, HBM bw 819 GB/s, ICI ~50 GB/s/link.
+
+Terms (seconds per step), using the convention that ``cost_analysis()`` of
+the SPMD-partitioned module reports **per-device** flops/bytes:
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = hbm_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / LINK_BW
+
+``collective_bytes_per_device`` is parsed from the post-partitioning HLO:
+for each collective instruction we charge the per-chip wire traffic of the
+standard ring algorithm —
+
+    all-gather       ≈ output_bytes × (n-1)/n   (receives the other shards)
+    reduce-scatter   ≈ input_bytes  × (n-1)/n
+    all-reduce       ≈ 2 × input_bytes × (n-1)/n  (RS + AG phases)
+    all-to-all       ≈ input_bytes × (n-1)/n
+    collective-permute ≈ input_bytes
+
+(n = participating devices per replica group, parsed from the instruction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s
+    link_bw: float = 50e9  # bytes/s/link (ICI)
+    hbm_bytes: float = 16e9  # v5e capacity
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:  # replica_groups=[G,S] → S devices per group
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device wire bytes per collective kind, from post-SPMD HLO text."""
+    # symbol table: instr name -> output bytes
+    sizes: Dict[str, int] = {}
+    per_kind: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        sizes[name] = shape_bytes(type_str)
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = None
+        for k in COLLECTIVE_OPS:
+            # count the op (or its async -start form); -done is the same
+            # transfer completing, so counting it would double the bytes
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        out_bytes = sizes[name]
+        n = _group_size(ln, n_devices)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-gather":
+            per_kind[kind] += out_bytes * frac
+        elif kind == "all-reduce":
+            per_kind[kind] += 2 * out_bytes * frac
+        elif kind == "reduce-scatter":
+            per_kind[kind] += out_bytes * (n - 1)  # input = out × n
+        elif kind == "all-to-all":
+            per_kind[kind] += out_bytes * frac
+        else:  # collective-permute
+            per_kind[kind] += out_bytes
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return per_kind
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+    n_devices: int,
+    hw: Optional[HW] = None,
+    model_flops: Optional[float] = None,
+) -> Dict[str, float]:
+    hw = hw or HW()
+    compute = flops_per_device / hw.peak_flops
+    memory = hbm_bytes_per_device / hw.hbm_bw
+    collective = collective_bytes_per_device / hw.link_bw
+    terms = {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": max(
+            ("compute_s", compute),
+            ("memory_s", memory),
+            ("collective_s", collective),
+            key=lambda kv: kv[1],
+        )[0],
+        "step_lower_bound_s": max(compute, memory, collective),
+    }
+    if model_flops is not None:
+        total_hlo = flops_per_device * n_devices
+        terms["model_flops"] = model_flops
+        terms["useful_flops_ratio"] = model_flops / total_hlo if total_hlo else 0.0
+        # roofline fraction: useful model flops per second vs peak
+        denom = terms["step_lower_bound_s"] * n_devices * hw.peak_flops
+        terms["roofline_fraction"] = model_flops / denom if denom else 0.0
+    return terms

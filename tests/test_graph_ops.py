@@ -1,0 +1,149 @@
+"""Property tests for the graph substrate (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph import generators as G
+from repro.graph import ops as gops
+from repro.graph.sampler import CSR, sample_khop
+from repro.graph.structure import from_edge_list
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(2, 24))
+    m = draw(st.integers(0, 60))
+    src = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m)
+    )
+    dst = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m)
+    )
+    pad = draw(st.integers(0, 8))
+    return from_edge_list(
+        np.array(src, np.int32),
+        np.array(dst, np.int32),
+        n,
+        pad_to=m + pad,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_graph(), st.integers(0, 2**31 - 1))
+def test_segment_sum_matches_numpy(g, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=g.n_edges).astype(np.float32)
+    out = gops.segment_reduce(
+        jnp.asarray(vals), g.dst, g.n_vertices, "sum",
+        indices_are_sorted=True, mask=g.edge_mask,
+    )
+    expect = np.zeros(g.n_vertices, np.float32)
+    dst, m = np.asarray(g.dst), np.asarray(g.edge_mask)
+    for i in range(g.n_edges):
+        if m[i]:
+            expect[dst[i]] += vals[i]
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_graph(), st.sampled_from(["min", "max", "or", "and"]))
+def test_segment_reduce_identities_on_empty(g, op):
+    """Empty segments must yield the combiner identity."""
+    if op in ("or", "and"):
+        vals = jnp.ones((g.n_edges,), jnp.bool_)
+    else:
+        vals = jnp.ones((g.n_edges,), jnp.float32)
+    out = gops.segment_reduce(
+        vals, g.dst, g.n_vertices, op, indices_are_sorted=True, mask=g.edge_mask
+    )
+    deg = np.asarray(gops.in_degrees(g))
+    o = np.asarray(out)
+    for v in range(g.n_vertices):
+        if deg[v] == 0:
+            if op == "min":
+                assert o[v] == np.inf
+            elif op == "max":
+                assert o[v] == -np.inf
+            elif op == "or":
+                assert not o[v]
+            else:
+                assert o[v]
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_graph(), st.integers(0, 2**31 - 1), st.sampled_from(["sum", "min", "max"]))
+def test_scatter_combine_matches_loop(g, seed, op):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=g.n_edges).astype(np.float32)
+    buf0 = rng.normal(size=g.n_vertices).astype(np.float32)
+    out = gops.scatter_combine(
+        jnp.asarray(buf0), g.dst, jnp.asarray(vals), op, mask=g.edge_mask
+    )
+    expect = buf0.copy()
+    dst, m = np.asarray(g.dst), np.asarray(g.edge_mask)
+    f = {"sum": lambda a, b: a + b, "min": min, "max": max}[op]
+    for i in range(g.n_edges):
+        if m[i]:
+            expect[dst[i]] = f(expect[dst[i]], vals[i])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+
+
+def test_edge_softmax_normalizes():
+    g = G.erdos_renyi(50, 5.0, seed=1)
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.normal(size=g.n_edges).astype(np.float32))
+    sm = gops.edge_softmax(
+        scores, g.dst, g.n_vertices, mask=g.edge_mask, indices_are_sorted=True
+    )
+    sums = gops.segment_reduce(
+        sm, g.dst, g.n_vertices, "sum", indices_are_sorted=True, mask=g.edge_mask
+    )
+    deg = np.asarray(gops.in_degrees(g))
+    s = np.asarray(sums)
+    assert np.all((np.abs(s - 1) < 1e-5) | (deg == 0))
+
+
+def test_symmetrize_produces_symmetric_graph():
+    g = G.erdos_renyi(40, 4.0, directed=False, seed=2)
+    src, dst, m = map(np.asarray, (g.src, g.dst, g.edge_mask))
+    edges = set(zip(src[m].tolist(), dst[m].tolist()))
+    assert all((d, s) in edges for s, d in edges)
+
+
+class TestSampler:
+    def test_khop_shapes_static(self):
+        g = G.erdos_renyi(100, 6.0, seed=3)
+        csr = CSR.from_graph(g)
+        seeds = jnp.arange(8)
+        blocks = sample_khop(csr, seeds, [5, 3], jax.random.PRNGKey(0))
+        assert blocks[0].neighbors.shape == (8, 5)
+        assert blocks[1].neighbors.shape == (40, 3)
+
+    def test_sampled_neighbors_are_real_neighbors(self):
+        g = G.erdos_renyi(60, 5.0, seed=4)
+        csr = CSR.from_graph(g)
+        seeds = jnp.arange(10)
+        (blk,) = sample_khop(csr, seeds, [7], jax.random.PRNGKey(1))
+        indptr = np.asarray(csr.indptr)
+        indices = np.asarray(csr.indices)
+        nbrs = np.asarray(blk.neighbors)
+        mask = np.asarray(blk.mask)
+        for i, v in enumerate(range(10)):
+            true_nbrs = set(indices[indptr[v]:indptr[v + 1]].tolist())
+            for j in range(7):
+                if mask[i, j]:
+                    assert nbrs[i, j] in true_nbrs
+                else:
+                    assert nbrs[i, j] == g.n_vertices
+
+    def test_zero_degree_masked(self):
+        g = from_edge_list(np.array([0], np.int32), np.array([1], np.int32), 4)
+        csr = CSR.from_graph(g)
+        (blk,) = sample_khop(csr, jnp.arange(4), [3], jax.random.PRNGKey(2))
+        mask = np.asarray(blk.mask)
+        assert mask[1].all()  # vertex 1 has in-neighbor 0
+        assert not mask[0].any() and not mask[2].any() and not mask[3].any()

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels execute in interpret mode on CPU (the TPU lowering is the
+target; interpret mode runs the same kernel body + grid semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gather_rows import gather_rows_pallas
+from repro.kernels.gather_rows.ref import gather_rows_ref
+from repro.kernels.segment_reduce import segment_sum_ell
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,h,hkv,sq,sk,d,causal,window",
+        [
+            (2, 4, 2, 64, 64, 32, True, None),
+            (1, 2, 2, 48, 80, 16, True, 16),
+            (2, 8, 4, 33, 57, 64, False, None),
+            (1, 4, 1, 128, 128, 128, True, 32),
+            (1, 1, 1, 8, 256, 64, True, None),
+        ],
+    )
+    def test_matches_ref(self, dtype, b, h, hkv, sq, sk, d, causal, window):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(jax.random.fold_in(key, 1), (b, h, sq, d), dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, sk, d), dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 3), (b, hkv, sk, d), dtype)
+        out = flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=32, block_k=32, interpret=True,
+        )
+        # ref accumulated in f32 (the kernel accumulates in f32 scratch, so
+        # it is *more* accurate than a bf16-accumulated reference)
+        ref = attention_ref(_f32(q), _f32(k), _f32(v), causal=causal,
+                            window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref, np.float32),
+            **TOL[dtype],
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sq=st.integers(1, 96),
+        sk=st.integers(8, 96),
+        blk=st.sampled_from([16, 32]),
+        causal=st.booleans(),
+    )
+    def test_property_ragged_shapes(self, sq, sk, blk, causal):
+        key = jax.random.PRNGKey(42)
+        q = jax.random.normal(key, (1, 2, sq, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, sk, 32))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, sk, 32))
+        out = flash_attention(
+            q, k, v, causal=causal, block_q=blk, block_k=blk, interpret=True
+        )
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5
+        )
+
+
+class TestSegmentSumEll:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "e,n,d,nb,eb,cap",
+        [
+            (500, 100, 16, 32, 32, None),
+            (2000, 300, 64, 64, 64, None),
+            (1000, 50, 8, 16, 16, 64),  # forced spill path
+            (64, 9, 128, 8, 8, None),
+        ],
+    )
+    def test_matches_ref(self, dtype, e, n, d, nb, eb, cap):
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=(e, d))).astype(dtype)
+        mask = jnp.asarray(rng.random(e) < 0.9)
+        out = segment_sum_ell(
+            vals, ids, n, mask=mask, nb=nb, eb=eb, budget_cap=cap,
+            interpret=True,
+        )
+        ref = segment_sum_ref(_f32(vals), ids, n, mask=mask)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **TOL[dtype],
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        e=st.integers(10, 400),
+        n=st.integers(2, 64),
+        seed=st.integers(0, 99),
+    )
+    def test_property_random_graphs(self, e, n, seed):
+        rng = np.random.default_rng(seed)
+        ids = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=(e, 16)).astype(np.float32))
+        out = segment_sum_ell(vals, ids, n, nb=16, eb=16, interpret=True)
+        ref = segment_sum_ref(vals, ids, n)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+        )
+
+
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "v,d,b,h", [(100, 16, 8, 4), (1000, 64, 16, 1), (50, 128, 4, 10)]
+    )
+    def test_matches_ref(self, dtype, v, d, b, h):
+        rng = np.random.default_rng(2)
+        table = jnp.asarray(rng.normal(size=(v, d))).astype(dtype)
+        idx = jnp.asarray(rng.integers(0, v, (b, h)).astype(np.int32))
+        w = jnp.asarray(rng.normal(size=(b, h))).astype(dtype)
+        mask = jnp.asarray(rng.random((b, h)) < 0.8)
+        out = embedding_bag_pallas(table, idx, weights=w, mask=mask,
+                                   interpret=True)
+        ref = embedding_bag_ref(_f32(table), idx, _f32(w) * mask)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **TOL[dtype],
+        )
+
+
+class TestGatherRows:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    @pytest.mark.parametrize("v,d,n", [(64, 16, 32), (500, 100, 7)])
+    def test_exact(self, dtype, v, d, n):
+        rng = np.random.default_rng(3)
+        table = jnp.asarray(rng.integers(-5, 5, (v, d))).astype(dtype)
+        idx = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+        out = gather_rows_pallas(table, idx, interpret=True)
+        ref = gather_rows_ref(table, idx)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_chain_access_composition(self):
+        """gather(gather) == pull-mode chain evaluation (logic.py, D²)."""
+        rng = np.random.default_rng(4)
+        n = 64
+        D = jnp.asarray(rng.integers(0, n, n).astype(np.int32))
+        table = jnp.asarray(rng.normal(size=(n, 128)).astype(np.float32))
+        d2 = np.asarray(D)[np.asarray(D)]
+        via_kernel = gather_rows_pallas(
+            gather_rows_pallas(table, D, interpret=True), D, interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(via_kernel), np.asarray(table)[d2], rtol=1e-6
+        )

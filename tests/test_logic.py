@@ -1,0 +1,102 @@
+"""Chain-access logic system tests (paper §4.1.1)."""
+
+import pytest
+
+from repro.core.logic import (
+    PullSolver,
+    PushSolver,
+    generalize,
+    is_subpattern,
+    pull_rounds,
+    push_rounds,
+)
+
+
+class TestPushSolver:
+    def test_axioms_are_free(self):
+        assert push_rounds(()) == 0
+        assert push_rounds(("D",)) == 0
+
+    def test_d2_request_reply(self):
+        # D[D[u]] needs a request and a reply: 2 rounds
+        assert push_rounds(("D", "D")) == 2
+
+    def test_d4_paper_example(self):
+        # the paper's headline example: D⁴[u] in 3 rounds, not 6
+        assert push_rounds(("D",) * 4) == 3
+
+    def test_d4_derivation_matches_figure7(self):
+        s = PushSolver()
+        plan = s.solve((), ("D",) * 4)
+        assert plan.rounds == 3
+        assert plan.via == ("D", "D")  # the w = D²[u] intermediate
+
+    def test_mixed_chain(self):
+        assert push_rounds(("B", "A")) == 2  # A[B[u]]
+        assert push_rounds(("C", "B", "A")) == 3
+
+    def test_monotone_in_depth(self):
+        prev = 0
+        for k in range(1, 10):
+            r = push_rounds(("D",) * k)
+            assert r >= prev
+            prev = r
+
+    def test_never_worse_than_request_reply(self):
+        # naive request/reply costs 2 rounds per hop
+        for k in range(2, 9):
+            assert push_rounds(("D",) * k) <= 2 * (k - 1)
+
+
+class TestPullSolver:
+    def test_axioms(self):
+        assert pull_rounds(()) == 0
+        assert pull_rounds(("D",)) == 0
+
+    def test_single_gather(self):
+        assert pull_rounds(("D", "D")) == 1
+        assert pull_rounds(("B", "A")) == 1
+
+    def test_pointer_doubling(self):
+        # ceil(log2 k) for uniform chains
+        import math
+
+        for k in range(1, 17):
+            assert pull_rounds(("D",) * k) == max(
+                0, math.ceil(math.log2(k))
+            ), k
+
+    def test_pull_beats_push(self):
+        for k in range(2, 9):
+            assert pull_rounds(("D",) * k) < push_rounds(("D",) * k)
+
+    def test_schedule_topological(self):
+        s = PullSolver()
+        order = s.schedule([("D",) * 4, ("D", "D", "A")])
+        seen = set()
+        for p in order:
+            plan = s.solve(p)
+            if plan.prefix is not None:
+                assert plan.prefix.pattern in seen
+                assert plan.suffix.pattern in seen
+            seen.add(p)
+
+    def test_schedule_dedups_shared_subchains(self):
+        s = PullSolver()
+        order = s.schedule([("D",) * 4, ("D",) * 2])
+        assert len(order) == len(set(order))
+        assert ("D", "D") in order
+
+
+class TestPatternAlgebra:
+    def test_subpattern(self):
+        assert is_subpattern((), ("D",))
+        assert is_subpattern(("D",), ("D", "D"))
+        assert not is_subpattern(("D",), ("D",))
+        assert not is_subpattern(("A",), ("D", "A"))
+
+    def test_generalize(self):
+        # K_{D[u]} D²[u]  →  K_u D[u]
+        assert generalize(("D",), ("D", "D")) == ((), ("D",))
+        # K_{D[u]} u cannot be generalized
+        assert generalize(("D",), ()) == (("D",), ())

@@ -1,0 +1,190 @@
+"""GNN + recsys model tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import gnn_full_batch, gnn_minibatches, recsys_batches
+from repro.graph import generators as G
+from repro.models.gnn import GNNConfig
+from repro.models.gnn import models as gm
+from repro.models.recsys import AutoIntConfig, autoint
+from repro.models.recsys.embedding import embedding_bag, embedding_bag_ragged
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+VARIANTS = [
+    ("sage", dict()),
+    ("gat", dict(n_heads=4)),
+    ("pna", dict()),
+    ("graphcast", dict(task="regression", d_edge=16)),
+]
+
+
+@pytest.mark.parametrize("variant,kw", VARIANTS)
+def test_gnn_forward_backward(variant, kw):
+    task = kw.get("task", "node_class")
+    cfg = GNNConfig(
+        name=variant, variant=variant, n_layers=2, d_hidden=16, d_in=8,
+        n_out=5, **kw,
+    )
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    batch = gnn_full_batch(64, 4.0, 8, 5, seed=1, task=task, n_out=5)
+    loss = jax.jit(lambda p, b: gm.loss_fn(p, b, cfg))(params, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: gm.loss_fn(p, batch, cfg))(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_gnn_training_reduces_loss():
+    cfg = GNNConfig(name="sage", variant="sage", n_layers=2, d_hidden=32,
+                    d_in=8, n_out=4)
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    batch = gnn_full_batch(128, 6.0, 8, 4, seed=2)
+    oc = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    st = adamw_init(params, oc)
+    loss0 = float(gm.loss_fn(params, batch, cfg))
+
+    @jax.jit
+    def step(p, s):
+        l, g = jax.value_and_grad(lambda q: gm.loss_fn(q, batch, cfg))(p)
+        p, s = adamw_update(g, s, p, oc)
+        return p, s, l
+
+    for _ in range(60):
+        params, st, loss = step(params, st)
+    assert float(loss) < loss0 * 0.7
+
+
+def test_sage_minibatch_pipeline():
+    cfg = GNNConfig(name="sage", variant="sage", n_layers=2, d_hidden=16,
+                    d_in=8, n_out=4, fanouts=(5, 3))
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    g = G.erdos_renyi(200, 6.0, seed=2)
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(200, 8)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, 200).astype(np.int32))
+    it = gnn_minibatches(g, feats, labels, 16, (5, 3), seed=3)
+    for _ in range(2):
+        batch = next(it)
+        loss = gm.sage_minibatch_loss(params, batch, cfg)
+        assert np.isfinite(float(loss))
+    logits = gm.sage_minibatch_forward(params, batch, cfg)
+    assert logits.shape == (16, 4)
+
+
+def test_graph_class_disjoint_union():
+    cfg = GNNConfig(name="pna", variant="pna", n_layers=2, d_hidden=16,
+                    d_in=4, n_out=3, task="graph_class")
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    b, n, e = 8, 10, 20
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, n, (b, e)) + (np.arange(b)[:, None] * n)
+    dst = rng.integers(0, n, (b, e)) + (np.arange(b)[:, None] * n)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(b * n, 4)).astype(np.float32)),
+        "src": jnp.asarray(src.reshape(-1).astype(np.int32)),
+        "dst": jnp.asarray(dst.reshape(-1).astype(np.int32)),
+        "emask": jnp.ones((b * e,), bool),
+        "graph_id": jnp.repeat(jnp.arange(b), n),
+        "labels": jnp.asarray(rng.integers(0, 3, b).astype(np.int32)),
+    }
+    loss = gm.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+
+
+class TestEmbeddingBag:
+    def test_fixed_width_modes(self):
+        rng = np.random.default_rng(0)
+        table = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 50, (4, 3)).astype(np.int32))
+        mask = jnp.asarray([[1, 1, 0], [1, 0, 0], [1, 1, 1], [0, 0, 0]], bool)
+        t = np.asarray(table)
+        i = np.asarray(idx)
+        m = np.asarray(mask)
+        s = np.asarray(embedding_bag(table, idx, mask=mask, mode="sum"))
+        mean = np.asarray(embedding_bag(table, idx, mask=mask, mode="mean"))
+        mx = np.asarray(embedding_bag(table, idx, mask=mask, mode="max"))
+        for b in range(4):
+            rows = t[i[b][m[b]]]
+            np.testing.assert_allclose(
+                s[b], rows.sum(0) if len(rows) else 0, rtol=1e-5, atol=1e-6
+            )
+            if len(rows):
+                np.testing.assert_allclose(mean[b], rows.mean(0), rtol=1e-5)
+                np.testing.assert_allclose(mx[b], rows.max(0), rtol=1e-5)
+            else:
+                np.testing.assert_allclose(mx[b], 0.0)
+
+    def test_ragged_matches_fixed(self):
+        rng = np.random.default_rng(1)
+        table = jnp.asarray(rng.normal(size=(30, 4)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 30, (5, 2)).astype(np.int32))
+        fixed = embedding_bag(table, idx, mode="sum")
+        flat = idx.reshape(-1)
+        bags = jnp.repeat(jnp.arange(5), 2)
+        ragged = embedding_bag_ragged(table, flat, bags, 5, mode="sum")
+        np.testing.assert_allclose(
+            np.asarray(fixed), np.asarray(ragged), rtol=1e-6
+        )
+
+    def test_weighted(self):
+        table = jnp.eye(4, dtype=jnp.float32)
+        idx = jnp.asarray([[0, 1]], jnp.int32)
+        w = jnp.asarray([[2.0, 3.0]])
+        out = np.asarray(embedding_bag(table, idx, weights=w))
+        np.testing.assert_allclose(out[0], [2.0, 3.0, 0, 0])
+
+
+class TestAutoInt:
+    def test_loss_near_log2(self):
+        cfg = AutoIntConfig(name="a", vocab_per_field=500)
+        params = autoint.init(jax.random.PRNGKey(0), cfg)
+        batch = next(recsys_batches(32, cfg.n_fields, 500))
+        loss = autoint.loss_fn(params, batch, cfg)
+        assert abs(float(loss) - np.log(2)) < 0.2
+
+    def test_training_reduces_loss(self):
+        cfg = AutoIntConfig(
+            name="a", vocab_per_field=100, mlp_dims=(64,), n_attn_layers=2
+        )
+        params = autoint.init(jax.random.PRNGKey(0), cfg)
+        batch = next(recsys_batches(256, cfg.n_fields, 100, seed=7))
+        oc = AdamWConfig(lr=1e-3, weight_decay=0.0)
+        st = adamw_init(params, oc)
+        loss0 = float(autoint.loss_fn(params, batch, cfg))
+
+        @jax.jit
+        def step(p, s):
+            l, g = jax.value_and_grad(
+                lambda q: autoint.loss_fn(q, batch, cfg)
+            )(p)
+            p, s = adamw_update(g, s, p, oc)
+            return p, s, l
+
+        for _ in range(50):
+            params, st, loss = step(params, st)
+        assert float(loss) < loss0
+
+    def test_retrieval_topk(self):
+        cfg = AutoIntConfig(name="a", vocab_per_field=100)
+        params = autoint.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        batch = {
+            "fields": jnp.asarray(
+                rng.integers(0, 100, (2, cfg.n_fields)).astype(np.int32)
+            ),
+            "candidates": jnp.asarray(
+                rng.normal(size=(1000, cfg.d_attn)).astype(np.float32)
+            ),
+        }
+        scores, ids = autoint.retrieval_score(params, batch, cfg, top_k=7)
+        assert scores.shape == (2, 7) and ids.shape == (2, 7)
+        # scores must be the true top-k of the full score matrix
+        q = autoint.query_embedding(params, batch, cfg)
+        full = np.asarray(q @ batch["candidates"].T)
+        np.testing.assert_allclose(
+            np.asarray(scores), np.sort(full, axis=1)[:, ::-1][:, :7], rtol=1e-5
+        )

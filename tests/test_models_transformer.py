@@ -1,0 +1,185 @@
+"""Transformer model tests: attention equivalences, decode consistency, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import MoEConfig, TransformerConfig
+from repro.models.transformer import model as tm
+from repro.models.transformer import attention as att
+from repro.models.transformer import moe as moe_mod
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="tiny",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=101,
+        qk_norm=True,
+        qkv_bias=True,
+        param_dtype="float32",
+        compute_dtype="float32",
+        attn_chunk_q=8,
+        attn_chunk_kv=8,
+    )
+    base.update(kw)
+    return TransformerConfig(**base)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("window", [None, 8])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_chunked_matches_dense(self, window, causal):
+        key = jax.random.PRNGKey(0)
+        b, s, h, hkv, dh = 2, 33, 4, 2, 16
+        q = jax.random.normal(key, (b, s, h, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+        pos = jnp.arange(s)
+        dense = att.attention_dense(q, k, v, pos, pos, causal=causal, window=window)
+        chunked = att.attention_chunked(
+            q, k, v, pos, pos, causal=causal, window=window, chunk_q=8, chunk_kv=8
+        )
+        np.testing.assert_allclose(
+            np.asarray(dense), np.asarray(chunked), rtol=2e-5, atol=2e-5
+        )
+
+    def test_rope_relative_shift_invariance(self):
+        """RoPE scores depend only on relative positions."""
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 4, 2, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 2, 32))
+        p0 = jnp.arange(4)
+        q0 = att.apply_rope(q, p0, 1e4)
+        k0 = att.apply_rope(k, p0, 1e4)
+        q1 = att.apply_rope(q, p0 + 100, 1e4)
+        k1 = att.apply_rope(k, p0 + 100, 1e4)
+        s0 = jnp.einsum("bqhd,bkhd->bhqk", q0, k0)
+        s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=2e-4, atol=2e-4)
+
+    def test_gqa_repeat(self):
+        k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4).astype(jnp.float32)
+        r = att.repeat_kv(k, 3)
+        assert r.shape == (2, 3, 6, 4)
+        np.testing.assert_array_equal(np.asarray(r[:, :, 0]), np.asarray(r[:, :, 2]))
+
+
+class TestModel:
+    def test_loss_near_log_vocab_at_init(self):
+        cfg = tiny_cfg()
+        params = tm.init(jax.random.PRNGKey(0), cfg)
+        batch = {
+            "tokens": jnp.ones((2, 16), jnp.int32),
+            "labels": jnp.ones((2, 16), jnp.int32),
+        }
+        loss = tm.loss_fn(params, batch, cfg)
+        assert abs(float(loss) - np.log(cfg.vocab_size)) < 0.5
+
+    def test_grads_finite(self):
+        cfg = tiny_cfg()
+        params = tm.init(jax.random.PRNGKey(0), cfg)
+        batch = {
+            "tokens": jnp.ones((2, 16), jnp.int32),
+            "labels": jnp.ones((2, 16), jnp.int32),
+        }
+        g = jax.grad(lambda p: tm.loss_fn(p, batch, cfg))(params)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.all(np.isfinite(np.asarray(leaf)))
+
+    def test_greedy_decode_matches_teacher_forcing(self):
+        cfg = tiny_cfg(swa_window=16)
+        params = tm.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, 101)
+        logits_pre, cache = tm.prefill(params, toks, cfg, capacity=32)
+        cur = jnp.argmax(logits_pre[:, -1], -1)[:, None].astype(jnp.int32)
+        outs = [cur]
+        for _ in range(8):
+            dl, cache = tm.decode_step(params, cache, cur, cfg)
+            cur = jnp.argmax(dl, -1)[:, None].astype(jnp.int32)
+            outs.append(cur)
+        seq = jnp.concatenate([toks] + outs, 1)
+        lf, _ = tm.prefill(params, seq[:, :-1], cfg, capacity=32)
+        ref = jnp.argmax(lf[:, 11:], -1)
+        assert bool(jnp.all(ref == seq[:, 12:]))
+
+    def test_swa_ring_buffer_decode(self):
+        cfg = tiny_cfg(swa_window=8, attn_impl="dense")
+        params = tm.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 20), 0, 101)
+        _, cache = tm.prefill(params, toks, cfg)
+        assert cache["k"].shape[2] == 8  # window-bounded cache
+        one = jnp.ones((1, 1), jnp.int32)
+        dl, _ = tm.decode_step(params, cache, one, cfg)
+        lfull, _ = tm.prefill(params, jnp.concatenate([toks, one], 1), cfg)
+        np.testing.assert_allclose(
+            np.asarray(dl), np.asarray(lfull[:, -1]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_param_count_matches_analytic(self):
+        cfg = tiny_cfg(qkv_bias=False, qk_norm=False)
+        params = tm.init(jax.random.PRNGKey(0), cfg)
+        actual = sum(
+            int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params)
+        )
+        assert actual == cfg.n_params()
+
+
+class TestMoE:
+    def cfg(self):
+        return tiny_cfg(
+            n_kv_heads=4,
+            moe=MoEConfig(
+                n_experts=8, top_k=2, d_ff_expert=32, n_shared_experts=1
+            ),
+        )
+
+    def test_moe_loss_and_grads(self):
+        cfg = self.cfg()
+        params = tm.init(jax.random.PRNGKey(1), cfg)
+        batch = {
+            "tokens": jnp.ones((2, 16), jnp.int32),
+            "labels": jnp.ones((2, 16), jnp.int32),
+        }
+        loss = tm.loss_fn(params, batch, cfg)
+        assert np.isfinite(float(loss))
+        g = jax.grad(lambda p: tm.loss_fn(p, batch, cfg))(params)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.all(np.isfinite(np.asarray(leaf)))
+
+    def test_dispatch_positions_within_capacity(self):
+        mcfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8)
+        idx = jax.random.randint(jax.random.PRNGKey(0), (64, 2), 0, 4)
+        cap = moe_mod.capacity(64, mcfg)
+        pos, keep = moe_mod.dispatch_indices(idx, 4, cap)
+        pos, keep, idx = map(np.asarray, (pos, keep, idx))
+        flat = idx.reshape(-1)
+        # positions are unique within each expert among kept slots
+        for e in range(4):
+            ps = pos[(flat == e) & keep]
+            assert len(ps) == len(set(ps.tolist()))
+            assert (ps < cap).all()
+
+    def test_moe_output_is_gate_weighted_expert_mix(self):
+        """With capacity ≥ tokens, MoE must equal the dense per-token mix."""
+        mcfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16,
+                         capacity_factor=8.0)
+        d = 8
+        params = moe_mod.init_moe_params(jax.random.PRNGKey(0), d, mcfg,
+                                         jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (10, d))
+        y, _ = moe_mod.moe_ffn(x, params, mcfg)
+        # reference: run every expert densely, combine with the same gates
+        eidx, gate, _ = moe_mod.route(x, params["router"], mcfg)
+        ref = np.zeros((10, d), np.float32)
+        for t in range(10):
+            for j in range(mcfg.top_k):
+                e = int(eidx[t, j])
+                h = jax.nn.silu(x[t] @ params["w1"][e]) * (x[t] @ params["w3"][e])
+                ref[t] += float(gate[t, j]) * np.asarray(h @ params["w2"][e])
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,118 @@
+"""Palgol parser tests."""
+
+import pytest
+
+from repro.core import ast
+from repro.core import algorithms as alg
+from repro.core.parser import PalgolSyntaxError, parse
+
+
+class TestParseStdlib:
+    @pytest.mark.parametrize("name", sorted(alg.ALL))
+    def test_parses(self, name):
+        prog = parse(alg.ALL[name])
+        assert isinstance(prog, (ast.Step, ast.Seq, ast.Iter))
+
+    def test_sssp_structure(self):
+        prog = parse(alg.SSSP)
+        assert isinstance(prog, ast.Seq)
+        init, it = prog.progs
+        assert isinstance(init, ast.Step)
+        assert isinstance(it, ast.Iter)
+        assert it.fix_fields == ("D",)
+
+    def test_sv_chain_and_remote(self):
+        prog = parse(alg.SV)
+        it = prog.progs[1]
+        exprs = list(ast.walk_exprs(it))
+        # D[D[u]] appears as nested FieldAccess
+        nested = [
+            e
+            for e in exprs
+            if isinstance(e, ast.FieldAccess)
+            and isinstance(e.index, ast.FieldAccess)
+        ]
+        assert nested
+        stmts = [
+            s
+            for step in _steps(it)
+            for s in ast.walk_stmts(step.body)
+            if isinstance(s, ast.RemoteWrite)
+        ]
+        assert stmts and stmts[0].op == "<?="
+
+    def test_pagerank_fixed_trips(self):
+        prog = parse(alg.PAGERANK)
+        it = prog.progs[1]
+        assert it.fixed_trips == 30
+        assert it.fix_fields == ()
+
+
+def _steps(p):
+    if isinstance(p, ast.Step):
+        yield p
+    elif isinstance(p, ast.Seq):
+        for q in p.progs:
+            yield from _steps(q)
+    elif isinstance(p, ast.Iter):
+        yield from _steps(p.body)
+
+
+class TestSyntaxErrors:
+    def test_remote_plain_assign_rejected(self):
+        src = """
+for v in V
+    remote D[Id[v]] := 1
+end
+"""
+        with pytest.raises(PalgolSyntaxError):
+            parse(src)
+
+    def test_lowercase_field_rejected(self):
+        src = """
+for v in V
+    local D[v] := d[v]
+end
+"""
+        with pytest.raises(PalgolSyntaxError):
+            parse(src)
+
+    def test_comprehension_needs_edge_range(self):
+        src = """
+for v in V
+    let x = sum [1 | e <- D[v]]
+end
+"""
+        with pytest.raises(PalgolSyntaxError):
+            parse(src)
+
+    def test_inconsistent_dedent(self):
+        src = "for v in V\n    local D[v] := 1\n  local E[v] := 2\nend\n"
+        with pytest.raises(PalgolSyntaxError):
+            parse(src)
+
+    def test_edge_prop_only_on_vars(self):
+        with pytest.raises(PalgolSyntaxError):
+            parse("for v in V\n    local D[v] := D[v].id\nend\n")
+
+
+class TestExpressions:
+    def test_precedence(self):
+        prog = parse("for v in V\n    local X[v] := 1 + 2 * 3 < 7 && true\nend\n")
+        (step,) = list(_steps(prog))
+        (w,) = step.body
+        # (&& ((1 + (2*3)) < 7) true)
+        assert isinstance(w.value, ast.BinOp) and w.value.op == "&&"
+        cmp = w.value.left
+        assert cmp.op == "<" and cmp.left.op == "+"
+
+    def test_ternary_nesting(self):
+        prog = parse(
+            "for v in V\n    local X[v] := Id[v] == 0 ? 1 : Id[v] == 1 ? 2 : 3\nend\n"
+        )
+        (step,) = list(_steps(prog))
+        assert isinstance(step.body[0].value, ast.Cond)
+
+    def test_stop_step(self):
+        prog = parse("stop v in V if Id[v] == 0\n")
+        assert isinstance(prog, ast.StopStep)

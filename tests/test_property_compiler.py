@@ -1,0 +1,152 @@
+"""Property-based compiler fuzzing: random Palgol programs, random graphs —
+the dense compiled executor must agree with the per-vertex interpreter, and
+the three superstep accountings must be consistently ordered.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ast, compile_program, interpret
+from repro.core.logic import pull_rounds, push_rounds
+from repro.graph import generators as G
+
+
+# --- random program generator (a bounded but expressive family) -----------
+
+FIELDS = ["A", "B", "C"]
+INT_FIELDS = ["P", "Q"]  # vertex-id-valued (usable as chain links)
+
+
+@st.composite
+def vertex_expr(draw, depth=0):
+    """Int/float-valued expression in vertex context."""
+    choices = ["const", "field", "id"]
+    if depth < 2:
+        choices += ["binop", "chain", "reduce", "cond"]
+    kind = draw(st.sampled_from(choices))
+    if kind == "const":
+        return ast.Const(draw(st.integers(-3, 3)))
+    if kind == "id":
+        return ast.FieldAccess("Id", ast.Var("v"))
+    if kind == "field":
+        return ast.FieldAccess(draw(st.sampled_from(FIELDS)), ast.Var("v"))
+    if kind == "chain":
+        f = draw(st.sampled_from(INT_FIELDS))
+        g = draw(st.sampled_from(FIELDS + INT_FIELDS))
+        # G[F[v]] — a depth-2 chain access
+        return ast.FieldAccess(g, ast.FieldAccess(f, ast.Var("v")))
+    if kind == "binop":
+        op = draw(st.sampled_from(["+", "-", "*"]))
+        return ast.BinOp(
+            op, draw(vertex_expr(depth + 1)), draw(vertex_expr(depth + 1))
+        )
+    if kind == "cond":
+        return ast.Cond(
+            ast.BinOp(
+                "<", draw(vertex_expr(depth + 1)), draw(vertex_expr(depth + 1))
+            ),
+            draw(vertex_expr(depth + 1)),
+            draw(vertex_expr(depth + 1)),
+        )
+    # reduce: a neighborhood comprehension
+    func = draw(st.sampled_from(["sum", "minimum", "maximum", "count"]))
+    body = (
+        ast.Const(1)
+        if func == "count"
+        else ast.FieldAccess(
+            draw(st.sampled_from(FIELDS)), ast.EdgeProp("e", "id")
+        )
+    )
+    return ast.Reduce(
+        func, body, "e", ast.EdgeList("nbr", ast.Var("v")), ()
+    )
+
+
+@st.composite
+def step(draw):
+    stmts = []
+    n_stmts = draw(st.integers(1, 3))
+    # one combiner per field per step (mixed combiners are rejected by the
+    # compiler as order-dependent — see analysis.py)
+    remote_op = {
+        f: draw(st.sampled_from(["+=", "<?=", ">?="])) for f in FIELDS
+    }
+    for _ in range(n_stmts):
+        kind = draw(st.sampled_from(["local", "local", "remote", "if"]))
+        field = draw(st.sampled_from(FIELDS))
+        if kind == "local":
+            op = draw(st.sampled_from([":=", "+=", "<?=", ">?="]))
+            stmts.append(ast.LocalWrite(field, op, draw(vertex_expr()), "v"))
+        elif kind == "remote":
+            op = remote_op[field]
+            target = ast.FieldAccess(
+                draw(st.sampled_from(INT_FIELDS)), ast.Var("v")
+            )
+            stmts.append(ast.RemoteWrite(field, target, op, draw(vertex_expr())))
+        else:
+            stmts.append(
+                ast.If(
+                    ast.BinOp("<", draw(vertex_expr()), draw(vertex_expr())),
+                    (ast.LocalWrite(field, ":=", draw(vertex_expr()), "v"),),
+                    (),
+                )
+            )
+    return ast.Step("v", tuple(stmts))
+
+
+@st.composite
+def program(draw):
+    items = [draw(step()) for _ in range(draw(st.integers(1, 2)))]
+    if draw(st.booleans()):
+        items.append(ast.Iter(draw(step()), ("A",)))
+    return ast.Seq(tuple(items)) if len(items) > 1 else items[0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(program(), st.integers(0, 10**6))
+def test_compiled_matches_interpreter_on_random_programs(prog, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 24))
+    g = G.erdos_renyi(n, 3.0, directed=False, seed=seed % 100)
+    fields = {
+        "A": jnp.asarray(rng.integers(-4, 4, n).astype(np.int32)),
+        "B": jnp.asarray(rng.integers(-4, 4, n).astype(np.int32)),
+        "C": jnp.asarray(rng.integers(-4, 4, n).astype(np.int32)),
+        "P": jnp.asarray(rng.integers(0, n, n).astype(np.int32)),
+        "Q": jnp.asarray(rng.integers(0, n, n).astype(np.int32)),
+    }
+    cp = compile_program(prog, g, initial_fields=fields, max_iters=12)
+    out, trips, counts = cp.run(fields)
+    ref, rtrips = interpret(prog, g, fields, max_iters=12)
+    # iteration counts may differ only if max_iters was hit
+    if trips[: len(rtrips)] == rtrips:
+        for f in sorted(out):
+            if f.startswith("_"):
+                continue
+            a, b = np.asarray(out[f]), np.asarray(ref[f])
+            assert np.array_equal(a, b), (f, a, b)
+    # the accounting orderings always hold
+    assert counts["palgol_pull"] <= counts["palgol_push"] <= counts["naive"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["D", "E"]), min_size=1, max_size=8))
+def test_round_count_orderings(chain):
+    """pull ≤ push ≤ naive(2·(k−1)) for every chain pattern."""
+    pat = tuple(chain)
+    k = len(pat)
+    assert pull_rounds(pat) <= push_rounds(pat)
+    if k > 1:
+        assert push_rounds(pat) <= 2 * (k - 1)
+        assert pull_rounds(pat) >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64))
+def test_pull_rounds_log2(k):
+    import math
+
+    assert pull_rounds(("D",) * k) == max(0, math.ceil(math.log2(k)))

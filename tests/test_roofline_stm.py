@@ -1,0 +1,133 @@
+"""Roofline HLO parsing + STM merging/fusion unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import ast
+from repro.core.parser import parse
+from repro.core.stm import build_stm, superstep_report
+from repro.roofline.analysis import (
+    HW,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    shape_bytes,
+)
+
+
+class TestHloParsing:
+    def test_shape_bytes(self):
+        assert shape_bytes("f32[128,1024]") == 128 * 1024 * 4
+        assert shape_bytes("bf16[2,3,4]") == 48
+        assert shape_bytes("(f32[8], s32[8])") == 64
+        assert shape_bytes("pred[16]") == 16
+        assert shape_bytes("f32[]") == 4  # scalar
+
+    def test_collective_accounting(self):
+        hlo = """
+  %x = f32[1024,256] parameter(0)
+  %ag = f32[1024,1024] all-gather(%x), replica_groups=[64,4]<=[256]
+  %ar = f32[1024,256] all-reduce(%x), replica_groups=[16,16]<=[256]
+  %rs = f32[64,256] reduce-scatter(%x), replica_groups=[16,16]<=[256]
+  %done = f32[1024,1024] all-gather-done(%ag)
+"""
+        out = collective_bytes_from_hlo(hlo, 256)
+        # all-gather: output 4MB × 3/4
+        assert out["all-gather"] == pytest.approx(1024 * 1024 * 4 * 0.75)
+        # all-reduce: 2 × out × 15/16
+        assert out["all-reduce"] == pytest.approx(
+            2 * 1024 * 256 * 4 * 15 / 16
+        )
+        # reduce-scatter: out × (n-1)
+        assert out["reduce-scatter"] == pytest.approx(64 * 256 * 4 * 15)
+        # -done must NOT double count
+        assert out["total"] == pytest.approx(
+            out["all-gather"] + out["all-reduce"] + out["reduce-scatter"]
+        )
+
+    def test_roofline_terms(self):
+        t = roofline_terms(
+            flops_per_device=197e12,  # exactly 1 second of compute
+            hbm_bytes_per_device=819e9,  # exactly 1 second of HBM
+            collective_bytes_per_device=100e9,  # 2 seconds of ICI
+            n_devices=256,
+            hw=HW(),
+            model_flops=197e12 * 256,  # perfectly useful
+        )
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["memory_s"] == pytest.approx(1.0)
+        assert t["collective_s"] == pytest.approx(2.0)
+        assert t["bottleneck"] == "collective_s"
+        assert t["useful_flops_ratio"] == pytest.approx(1.0)
+        assert t["roofline_fraction"] == pytest.approx(0.5)  # 2s vs 1s ideal
+
+
+SIMPLE = """
+for v in V
+    local A[v] := 0
+end
+for v in V
+    local A[v] := A[v] + 1
+end
+"""
+
+NBR_ITER = """
+for v in V
+    local A[v] := Id[v]
+end
+do
+    for v in V
+        let m = minimum [A[e.id] | e <- Nbr[v]]
+        if (m < A[v])
+            local A[v] := m
+    end
+until fix [A]
+"""
+
+CHAIN_RW = """
+do
+    for v in V
+        if (A[A[v]] == A[v])
+            remote A[A[v]] <?= Id[v]
+    end
+until fix [A]
+"""
+
+
+class TestStmOptimizations:
+    def test_sequence_merging_saves_one(self):
+        prog = parse(SIMPLE)
+        _, opt = build_stm(prog, "push", optimize=True)
+        _, naive = build_stm(prog, "naive", optimize=False)
+        assert opt.base == naive.base - 1  # two MAIN states merged into one
+
+    def test_iteration_fusion_removes_send_superstep(self):
+        prog = parse(NBR_ITER)
+        _, fused = build_stm(prog, "push", optimize=True)
+        _, plain = build_stm(prog, "push", optimize=False)
+        # body = [RR(send), MAIN]: fused per-iter = 1, unfused = 2
+        assert fused.per_iter[0] == 1
+        assert plain.per_iter[0] == 2
+
+    def test_chain_and_remote_write_states(self):
+        prog = parse(CHAIN_RW)
+        _, push = build_stm(prog, "push", optimize=True)
+        _, pull = build_stm(prog, "pull", optimize=True)
+        _, naive = build_stm(prog, "naive", optimize=False)
+        # push: D² chain = 2 RR + MAIN + RU, fused ⇒ 3/iter
+        assert push.per_iter[0] == 3
+        # pull: 1 RR + MAIN + RU, fused ⇒ 2/iter
+        assert pull.per_iter[0] == 2
+        # naive: 2 RR (request/reply) + MAIN + RU, unfused ⇒ 4/iter
+        assert naive.per_iter[0] == 4
+
+    def test_report_orderings_on_stdlib(self):
+        from repro.core import algorithms as alg
+
+        for name, src in alg.ALL.items():
+            rep = superstep_report(parse(src))
+            trips = {i: 3 for i in range(4)}
+            assert (
+                rep["palgol_pull"].count(trips)
+                <= rep["palgol_push"].count(trips)
+                <= rep["naive"].count(trips)
+            ), name

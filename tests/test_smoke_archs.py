@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation) — see launch/dryrun.py."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import gnn_full_batch, recsys_batches
+from repro.models.gnn import models as gm
+from repro.models.recsys import autoint
+from repro.models.transformer import model as tm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+LM_ARCHS = [
+    "h2o-danube-1.8b",
+    "qwen3-32b",
+    "qwen2.5-32b",
+    "qwen3-moe-235b-a22b",
+    "deepseek-moe-16b",
+]
+GNN_ARCHS = ["pna", "graphsage-reddit", "graphcast", "gat-cora"]
+
+
+def _no_nans(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float64))), "NaN/Inf"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    spec = configs.get_spec(arch)
+    cfg = spec.reduced
+    params = tm.init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                     cfg.vocab_size),
+    }
+    # forward shapes
+    hidden, _ = tm.forward(params, batch["tokens"], cfg)
+    assert hidden.shape == (b, s, cfg.d_model)
+    logits = tm.logits_from_hidden(params, hidden, cfg)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    _no_nans(logits)
+    # one full train step (grad + AdamW)
+    oc = AdamWConfig(lr=1e-3)
+    st = adamw_init(params, oc)
+    loss, g = jax.value_and_grad(lambda p: tm.loss_fn(p, batch, cfg))(params)
+    assert np.isfinite(float(loss))
+    new_params, _ = adamw_update(g, st, params, oc)
+    _no_nans(new_params)
+    # decode step shape
+    logits_pre, cache = tm.prefill(params, batch["tokens"], cfg, capacity=64)
+    dl, cache2 = tm.decode_step(
+        params, cache, batch["tokens"][:, :1], cfg
+    )
+    assert dl.shape == (b, cfg.vocab_size)
+    assert int(cache2["length"][0]) == s + 1
+    _no_nans(dl)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke(arch):
+    spec = configs.get_spec(arch)
+    cfg = spec.reduced
+    batch = gnn_full_batch(
+        64, 4.0, cfg.d_in, cfg.n_out, seed=3, task=cfg.task, n_out=cfg.n_out
+    )
+    params = gm.init(jax.random.PRNGKey(0), cfg)
+    out = gm.forward(params, batch, cfg)
+    assert out.shape == (batch["x"].shape[0], cfg.n_out)
+    _no_nans(out)
+    loss, g = jax.value_and_grad(lambda p: gm.loss_fn(p, batch, cfg))(params)
+    assert np.isfinite(float(loss))
+    _no_nans(g)
+
+
+def test_autoint_smoke():
+    spec = configs.get_spec("autoint")
+    cfg = spec.reduced
+    params = autoint.init(jax.random.PRNGKey(0), cfg)
+    batch = next(recsys_batches(16, cfg.n_fields, cfg.vocab_per_field))
+    logits = autoint.forward(params, batch, cfg)
+    assert logits.shape == (16,)
+    _no_nans(logits)
+    loss, g = jax.value_and_grad(lambda p: autoint.loss_fn(p, batch, cfg))(
+        params
+    )
+    assert np.isfinite(float(loss))
+    _no_nans(g)
+
+
+def test_registry_covers_all_assigned():
+    assert sorted(configs.all_arch_ids()) == sorted(
+        LM_ARCHS + GNN_ARCHS + ["autoint"]
+    )
+    for arch in configs.all_arch_ids():
+        spec = configs.get_spec(arch)
+        assert len(spec.shapes) == 4  # 4 shape cells per arch = 40 total
+
+
+def test_full_configs_match_assignment():
+    """The published numbers, verbatim."""
+    c = configs.get_spec("qwen3-32b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (64, 5120, 64, 8)
+    assert (c.d_ff, c.vocab_size, c.qk_norm) == (25600, 151936, True)
+    c = configs.get_spec("qwen2.5-32b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (64, 5120, 40, 8)
+    assert (c.d_ff, c.vocab_size, c.qkv_bias) == (27648, 152064, True)
+    c = configs.get_spec("h2o-danube-1.8b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (24, 2560, 32, 8)
+    assert (c.d_ff, c.vocab_size, c.swa_window) == (6912, 32000, 4096)
+    c = configs.get_spec("qwen3-moe-235b-a22b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (94, 4096, 64, 4)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff_expert) == (128, 8, 1536)
+    assert c.vocab_size == 151936
+    # ~235B total / ~22B active sanity
+    assert 2.0e11 < c.n_params() < 2.7e11, c.n_params()
+    assert 1.8e10 < c.n_active_params() < 2.6e10, c.n_active_params()
+    c = configs.get_spec("deepseek-moe-16b").config
+    assert (c.n_layers, c.d_model, c.n_heads) == (28, 2048, 16)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared_experts) == (64, 6, 2)
+    assert c.vocab_size == 102400
+    assert 1.2e10 < c.n_params() < 2.2e10, c.n_params()
+    c = configs.get_spec("pna").config
+    assert (c.n_layers, c.d_hidden) == (4, 75)
+    assert c.pna_aggregators == ("mean", "max", "min", "std")
+    c = configs.get_spec("graphsage-reddit").config
+    assert (c.n_layers, c.d_hidden, c.aggregator) == (2, 128, "mean")
+    assert c.fanouts == (25, 10)
+    c = configs.get_spec("graphcast").config
+    assert (c.n_layers, c.d_hidden, c.n_out) == (16, 512, 227)
+    c = configs.get_spec("gat-cora").config
+    assert (c.n_layers, c.d_hidden, c.n_heads) == (2, 8, 8)
+    c = configs.get_spec("autoint").config
+    assert (c.n_fields, c.embed_dim, c.n_attn_layers) == (39, 16, 3)
+    assert (c.n_heads, c.d_attn) == (2, 32)
