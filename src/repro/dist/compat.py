@@ -1,0 +1,70 @@
+"""Version compatibility shims for the distribution layer.
+
+The codebase (and the dry-run/test harness) targets the modern mesh API:
+
+* ``jax.make_mesh(shape, axes, axis_types=(AxisType.Auto, ...))``
+* ``jax.sharding.AxisType``
+
+Older jaxlib builds (< 0.4.38) predate ``AxisType`` and the ``axis_types``
+keyword. Rather than forking every call site on the jax version, this module
+installs the missing pieces *once*, gated on their absence:
+
+* a stand-in ``jax.sharding.AxisType`` enum (all meshes on old jax behave as
+  ``Auto`` — GSPMD propagation — which is exactly the semantics every caller
+  here requests);
+* a ``jax.make_mesh`` wrapper that accepts and drops ``axis_types``.
+
+Importing :mod:`repro.dist` (or any of its consumers) applies the shims, so
+subprocess tests that call ``jax.make_mesh(..., axis_types=...)`` directly
+keep working on both old and new jax. On a jax that already provides the
+API, this module is a no-op.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def install() -> None:
+    """Install the mesh-API shims if (and only if) jax lacks them."""
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins w/o sig
+        params = {}
+    if "axis_types" not in params:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # pre-AxisType jax meshes behave as Auto (GSPMD propagation);
+            # refuse loudly rather than silently degrade other semantics
+            auto = jax.sharding.AxisType.Auto
+            if axis_types is not None and any(
+                t is not auto for t in axis_types
+            ):
+                raise NotImplementedError(
+                    f"axis_types={axis_types} requires jaxlib >= 0.4.38; "
+                    "this jax only supports Auto-typed meshes"
+                )
+            if devices is not None:
+                return _orig_make_mesh(axis_shapes, axis_names,
+                                       devices=devices)
+            return _orig_make_mesh(axis_shapes, axis_names)
+
+        make_mesh.__doc__ = _orig_make_mesh.__doc__
+        jax.make_mesh = make_mesh
+
+
+install()

@@ -353,6 +353,15 @@ def recsys_cell(spec, shape_id, shape, mesh):
 # driver
 
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on jax ≥ 0.4.38 but a
+    one-element list of dicts on older jaxlibs — normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost if cost is not None else {}
+
+
 def _f32_shadow_estimate(hlo: str) -> int:
     """Bytes of f32 buffers that are dtype-shadows of bf16 buffers (same
     dims in both dtypes). Each distinct shadowed shape counted once."""
@@ -399,7 +408,7 @@ def dryrun_cell(arch_id: str, shape_id: str, mesh_kind: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled)
             hlo = compiled.as_text()
             probe = None
             if spec.family == "lm" and spec.config.n_layers > 2:
@@ -409,7 +418,7 @@ def dryrun_cell(arch_id: str, shape_id: str, mesh_kind: str,
                 )
                 compiled2 = fn2.lower(*args2).compile()
                 probe = (
-                    compiled2.cost_analysis(),
+                    _cost_dict(compiled2),
                     compiled2.as_text(),
                 )
     except Exception as e:  # record failures — they are bugs to fix

@@ -1,0 +1,210 @@
+"""Minimal, deterministic stand-in for ``hypothesis``.
+
+The property tests in this repo use a small slice of hypothesis:
+``@given`` / ``@settings`` and the ``integers`` / ``lists`` /
+``sampled_from`` / ``booleans`` / ``floats`` / ``composite`` strategies.
+When the real package is unavailable (hermetic CI images), ``conftest.py``
+installs this module as ``hypothesis`` in ``sys.modules`` so the same test
+code runs unmodified as *seeded random testing*:
+
+* every ``@given`` test draws ``max_examples`` example tuples from a
+  ``numpy`` Generator seeded by the test's qualified name — deterministic
+  across runs and machines, independent of execution order;
+* no shrinking, no example database, no health checks — on failure the
+  raised exception carries the offending drawn values in its notes.
+
+This is strictly weaker than hypothesis (no coverage-guided generation),
+but it preserves the property-test *semantics* the suite encodes. If real
+hypothesis is installed, the shim is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-repro-stub"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A value generator: ``example(rng) -> value``."""
+
+    def __init__(self, sample, label="strategy"):
+        self._sample = sample
+        self._label = label
+
+    def example(self, rng):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return f"<{self._label}>"
+
+
+class _Draw:
+    """The ``draw`` callable handed to ``@composite`` functions."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def __call__(self, strategy):
+        return strategy.example(self._rng)
+
+
+def _integers(min_value, max_value):
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def _floats(min_value=0.0, max_value=1.0, **kw):
+    del kw  # width / allow_nan etc. — not needed by this suite
+    span = max_value - min_value
+    return Strategy(
+        lambda rng: float(min_value + span * rng.random()),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return Strategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))],
+        f"sampled_from({elements!r:.40})",
+    )
+
+
+def _lists(elements, min_size=0, max_size=None):
+    if max_size is None:
+        max_size = min_size + 10
+
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(sample, f"lists(..., {min_size}, {max_size})")
+
+
+def _composite(fn):
+    """``@composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        return Strategy(
+            lambda rng: fn(_Draw(rng), *args, **kwargs),
+            f"composite:{fn.__name__}",
+        )
+
+    return factory
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.booleans = _booleans
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.composite = _composite
+strategies.SearchStrategy = Strategy
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+    """Decorator: records ``max_examples`` on the ``@given`` wrapper."""
+    del deadline, kw  # accepted for signature compat, ignored
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test over deterministically-seeded random examples.
+
+    Positional strategies bind to the test's *rightmost* parameters
+    (matching real hypothesis, so a leading pytest fixture keeps working
+    identically in both environments); keyword strategies bind by name.
+    The wrapper's signature hides the bound parameters so pytest does not
+    mistake them for fixtures.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        has_self = bool(params) and params[0].name == "self"
+        body = params[1:] if has_self else params
+        pos_names = [
+            p.name for p in body[len(body) - len(arg_strategies):]
+        ]
+        bound = set(pos_names) | set(kw_strategies)
+        passthrough = ([params[0]] if has_self else []) + [
+            p for p in body if p.name not in bound
+        ]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            done = discarded = 0
+            while done < n:
+                kw = {
+                    name: s.example(rng)
+                    for name, s in zip(pos_names, arg_strategies)
+                }
+                kw.update(
+                    (k, s.example(rng)) for k, s in kw_strategies.items()
+                )
+                try:
+                    fn(*args, **kw, **kwargs)
+                except UnsatisfiedAssumption:
+                    discarded += 1
+                    if discarded > 20 * n:
+                        raise RuntimeError(
+                            f"{fn.__qualname__}: assume() discarded "
+                            f"{discarded} examples for {done} accepted — "
+                            "strategy filters too much"
+                        )
+                    continue
+                except Exception as e:
+                    e.args = e.args + (
+                        f"[hypothesis-stub example {done}: kwargs={kw!r}]",
+                    )
+                    raise
+                done += 1
+
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        del wrapper.__wrapped__  # keep pytest off fn's original signature
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    """Discard the current example when ``condition`` is falsy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:  # noqa: D401 - attribute bag for compat
+    all = ()
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"

@@ -1,0 +1,243 @@
+"""Extra distribution-layer coverage beyond ``test_dist.py``:
+
+* property tests that the spec-derivation rules (``_maybe`` /
+  ``lm_param_spec`` / ``batch_shardings``-style entries) never emit a
+  partition whose mesh-axis product fails divisibility — for randomized
+  shapes AND randomized mesh sizes (the rules are pure in ``mesh.shape``,
+  so a lightweight mesh stand-in covers sizes no CPU host can build);
+* ``constrain`` must round-trip values bit-exactly when deactivated;
+* ``mp_edge_softmax`` vs ``edge_softmax`` on the 8-fake-device mesh
+  (``test_dist.py`` exercises only gather / segment_reduce).
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@st.composite
+def fake_mesh(draw):
+    """Mesh stand-in with arbitrary axis sizes (rules read only .shape)."""
+    shape = {}
+    if draw(st.booleans()):
+        shape["pod"] = draw(st.sampled_from([1, 2, 3]))
+    shape["data"] = draw(st.sampled_from([1, 2, 3, 4, 5, 8, 16]))
+    shape["model"] = draw(st.sampled_from([1, 2, 3, 4, 7, 8, 16]))
+    return SimpleNamespace(shape=shape)
+
+
+@st.composite
+def array_shape(draw):
+    ndim = draw(st.integers(1, 4))
+    return tuple(draw(st.integers(1, 48)) for _ in range(ndim))
+
+
+def _assert_divisible(spec, shape, mesh):
+    __tracebackhide__ = True
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        assert i < len(shape), (spec, shape)
+        size = shd.axis_size(entry, mesh)
+        assert shape[i] % size == 0, (spec, shape, mesh.shape)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fake_mesh(), array_shape(), st.integers(0, 2**31 - 1))
+def test_maybe_never_emits_indivisible_specs(mesh, shape, seed):
+    rng = np.random.default_rng(seed)
+    candidates = [None, "data", "model", ("data", "model")]
+    if "pod" in mesh.shape:
+        candidates += ["pod", ("pod", "data")]
+    axes = tuple(
+        candidates[int(rng.integers(0, len(candidates)))] for _ in shape
+    )
+    spec = shd._maybe(axes, shape, mesh)
+    assert len(tuple(spec)) == min(len(axes), len(shape))
+    _assert_divisible(spec, shape, mesh)
+    # entries survive untouched when they do divide
+    for a, e, dim in zip(axes, tuple(spec), shape):
+        if a is not None and all(n in mesh.shape for n in (
+            a if isinstance(a, tuple) else (a,)
+        )) and dim % shd.axis_size(a, mesh) == 0:
+            assert e == a
+
+
+_LM_PATHS = [
+    ("embed", 2),
+    ("unembed", 2),
+    ("layers/ln1", 2),
+    ("layers/wq", 3),
+    ("layers/wk", 3),
+    ("layers/wv", 3),
+    ("layers/wo", 3),
+    ("layers/ffn/w1", 3),
+    ("layers/ffn/w3", 3),
+    ("layers/ffn/w2", 3),
+    ("layers/moe/router", 3),
+    ("layers/moe/w1", 4),
+    ("layers/moe/w2", 4),
+    ("layers/moe/w3", 4),
+    ("layers/moe/shared/w1", 3),
+    ("layers/moe/shared/w2", 3),
+]
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    fake_mesh(),
+    st.sampled_from(_LM_PATHS),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(["fsdp", "zero1"]),
+)
+def test_lm_param_spec_always_divisible(mesh, path_ndim, seed, mode):
+    path, ndim = path_ndim
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(1, 64)) for _ in range(ndim))
+    leaf = SimpleNamespace(shape=shape)
+    spec = shd.lm_param_spec(path, leaf, mesh, mode=mode)
+    _assert_divisible(spec, shape, mesh)
+    if mode == "zero1":  # stored params carry no data-group shards
+        for entry in spec:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            assert "data" not in names and "pod" not in names, spec
+
+
+def test_known_spec_shapes_on_production_mesh_arithmetic():
+    """The policy table from the module docstring, on production-like sizes
+    (pure mesh.shape arithmetic — no 512-device host needed)."""
+    mesh = SimpleNamespace(shape={"data": 16, "model": 16})
+    wq = SimpleNamespace(shape=(64, 5120, 8192))
+    assert shd.lm_param_spec("layers/wq", wq, mesh) == P(None, "data", "model")
+    assert shd.lm_param_spec("layers/wq", wq, mesh, mode="zero1") == P(
+        None, None, "model"
+    )
+    odd = SimpleNamespace(shape=(64, 5120, 8200))  # 8200 % 16 != 0
+    assert shd.lm_param_spec("layers/wq", odd, mesh) == P(None, "data", None)
+    router = SimpleNamespace(shape=(64, 5120, 128))
+    assert shd.lm_param_spec("layers/moe/router", router, mesh) == P()
+
+
+def test_constrain_roundtrip_when_deactivated():
+    shd.deactivate()
+    rng = np.random.default_rng(0)
+    for shape, dtype in [((7, 13), np.float32), ((4, 4), np.int32),
+                         ((5,), np.float64)]:
+        x = jnp.asarray(rng.normal(size=shape).astype(dtype))
+        y = shd.constrain(x, (shd.ALL,) + (None,) * (x.ndim - 1))
+        assert y is x  # literal no-op, not a copy
+        z = shd.constrain(x, (shd.BATCH,) + (None,) * (x.ndim - 1))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+def test_constrain_truncates_overlength_axes():
+    """A spec longer than the array rank must truncate, not blow up."""
+    from repro.launch.mesh import make_mesh
+
+    m = make_mesh((1, 1), ("data", "model"))
+    shd.activate(m)
+    try:
+        x = jnp.ones((4, 4))
+        y = shd.constrain(x, (shd.BATCH, None, None))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    finally:
+        shd.deactivate()
+
+
+def test_batch_shardings_kinds():
+    from repro.launch.mesh import make_mesh
+
+    m = make_mesh((1, 1), ("data", "model"))
+    specs = {"x": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    for kind in ("lm", "gnn", "recsys"):
+        s = shd.batch_shardings(kind, specs, m)
+        assert s["x"].mesh == m
+    try:
+        shd.batch_shardings("nope", specs, m)
+    except ValueError as e:
+        assert "nope" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError for unknown kind")
+
+
+def test_activate_deactivate_roundtrip():
+    from repro.launch.mesh import make_mesh
+
+    assert shd.active_mesh() is None
+    m = make_mesh((1, 1), ("data", "model"))
+    assert shd.activate(m) is m
+    assert shd.active_mesh() is m
+    assert shd._ACTIVE_MESH is m
+    shd.deactivate()
+    assert shd.active_mesh() is None
+    shd.deactivate()  # idempotent
+
+
+EDGE_SOFTMAX_SUBPROCESS = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist import sharding as shd
+    from repro.graph import ops as gops
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    rng = np.random.default_rng(7)
+    n, e = 64, 128  # e divides the 8-way flattened mesh
+    dst = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+    scores = jnp.asarray(rng.normal(size=e).astype(np.float32) * 4.0)
+    mask = jnp.asarray(rng.random(e) < 0.85)
+
+    ref = gops.edge_softmax(scores, dst, n, mask=mask)
+    shd.activate(mesh)
+    with mesh:
+        mp = jax.jit(
+            lambda s, m: gops.mp_edge_softmax(s, dst, n, mask=m)
+        )(scores, mask)
+        # differentiable end-to-end (max + sum reductions across shards)
+        g = jax.jit(jax.grad(lambda s: jnp.sum(
+            gops.mp_edge_softmax(s, dst, n, mask=mask) ** 2
+        )))(scores)
+    shd.deactivate()
+    assert np.allclose(np.asarray(mp), np.asarray(ref), atol=1e-6), (
+        np.max(np.abs(np.asarray(mp) - np.asarray(ref))))
+    # masked edges contribute exactly zero; per-dst masses sum to 1
+    sums = gops.segment_reduce(mp, dst, n, "sum", mask=mask)
+    s = np.asarray(sums)
+    deg = np.zeros(n); np.add.at(deg, np.asarray(dst)[np.asarray(mask)], 1)
+    assert np.all((np.abs(s - 1) < 1e-5) | (deg == 0))
+    assert np.all(np.asarray(mp)[~np.asarray(mask)] == 0.0)
+    assert np.all(np.isfinite(np.asarray(g)))
+    print("EDGE_SOFTMAX_OK")
+    """
+)
+
+
+def test_mp_edge_softmax_multidevice():
+    """mp_edge_softmax matches edge_softmax on an 8-fake-device mesh."""
+    res = subprocess.run(
+        [sys.executable, "-c", EDGE_SOFTMAX_SUBPROCESS],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=500,
+        cwd=str(REPO),
+    )
+    assert "EDGE_SOFTMAX_OK" in res.stdout, res.stdout + res.stderr

@@ -113,7 +113,10 @@ class TestEmbeddingBag:
                 s[b], rows.sum(0) if len(rows) else 0, rtol=1e-5, atol=1e-6
             )
             if len(rows):
-                np.testing.assert_allclose(mean[b], rows.mean(0), rtol=1e-5)
+                # atol for near-zero elements: f32 summation-order noise
+                np.testing.assert_allclose(
+                    mean[b], rows.mean(0), rtol=1e-5, atol=1e-6
+                )
                 np.testing.assert_allclose(mx[b], rows.max(0), rtol=1e-5)
             else:
                 np.testing.assert_allclose(mx[b], 0.0)
