@@ -15,9 +15,17 @@ chain-access schedules:
   pull  — the logic-system-derived one-sided schedule (this framework)
 
 and records the roofline terms of one fixed-point iteration each. Writes
-experiments/palgol_mesh/<algo>_<mode>.json.
+experiments/palgol_mesh/<algo>_<mode>.json. Shardings come from
+``repro.dist`` (the ``ALL`` logical axis via ``batch_shardings``), the same
+rules the live models use.
+
+It also writes ``BENCH_palgol_mesh.json`` at the repo root: per-superstep
+communicated bytes of the replicated layout vs the partitioned layout
+(``repro.graph.partition``), measured on concrete graphs — the scaling
+argument for the halo-exchange subsystem in one artifact.
 
     PYTHONPATH=src python -m benchmarks.palgol_mesh [--scale 22]
+    PYTHONPATH=src python -m benchmarks.palgol_mesh --comm-only
 """
 
 import argparse
@@ -27,11 +35,11 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import algorithms as alg
 from repro.core import codegen, compile_program
 from repro.core import ast as past
+from repro.dist import sharding as shd
 from repro.graph.structure import Graph
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import HW, collective_bytes_from_hlo, roofline_terms
@@ -83,14 +91,10 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
         k: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype)
         for k, s in cp.field_struct.items()
     }
-    vshard = NamedSharding(mesh, P(("data", "model"),))
-    eshard = NamedSharding(mesh, P(("data", "model"),))
-    fshard = {k: vshard for k in fields}
-    gshard = Graph(
-        src=eshard, dst=eshard, weight=eshard, edge_mask=eshard,
-        t_src=eshard, t_dst=eshard, t_weight=eshard, t_mask=eshard,
-        n_vertices=n, n_edges=e,
-    )
+    # vertex/edge dims 1-D over the flattened mesh, via the repro.dist rules
+    # (ALL logical axis) instead of hand-rolled P(("data","model")) specs
+    fshard = shd.batch_shardings("gnn", fields, mesh)
+    gshard = shd.batch_shardings("gnn", ag, mesh)
 
     codegen.CHAIN_MODE = mode
     try:
@@ -105,7 +109,11 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
             compiled = lowered.compile()
     finally:
         codegen.CHAIN_MODE = "pull"
+    # cost_analysis() is a dict on jax ≥ 0.4.38, a one-element list before
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo, mesh.size)
     mem = compiled.memory_analysis()
@@ -130,12 +138,64 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
     }
 
 
+def comm_comparison(n_shards: int = 8) -> dict:
+    """Replicated-vs-partitioned bytes per superstep on concrete graphs.
+
+    Graphs are chosen to span locality regimes: a range-local grid (the
+    partitioned layout's best case — halo ≪ N), and an R-MAT power-law
+    graph (its worst case — cuts everywhere). Runs host-side (the
+    partitioner needs no devices), so it is cheap enough for CI and for
+    the partition acceptance test.
+    """
+    from repro.graph import generators as G
+    from repro.graph.partition import comm_bytes_report
+
+    cells = {}
+    graphs = {
+        "grid_512x8": G.grid2d(512, 8),
+        "rmat_s12": G.rmat(12, avg_degree=8.0, directed=True, seed=5),
+    }
+    for gname, g in graphs.items():
+        rep = comm_bytes_report(g, n_shards)
+        cells[gname] = rep
+    return {
+        "n_shards": n_shards,
+        "per_graph": cells,
+        "note": (
+            "bytes per pull superstep for one f32 vertex field, aggregate "
+            "across devices; 'padded' is the static-shape all_to_all cost "
+            "the implementation actually pays"
+        ),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=26,
                     help="log2 vertices (default 64M vertices, 1B edges)")
     ap.add_argument("--algos", default="sv,wcc")
+    ap.add_argument("--comm-only", action="store_true",
+                    help="only write BENCH_palgol_mesh.json (no 512-dev "
+                         "roofline lowering)")
+    ap.add_argument("--shards", type=int, default=8)
     args = ap.parse_args()
+
+    bench = comm_comparison(args.shards)
+    repo_root = Path(__file__).resolve().parent.parent
+    (repo_root / "BENCH_palgol_mesh.json").write_text(json.dumps(bench, indent=1))
+    for gname, rec in bench["per_graph"].items():
+        red = rec["reduction_vs_replicated"]
+        nph = rec["vertices_per_halo_entry"]
+        print(
+            f"{gname}: replicated={rec['replicated_bytes_per_superstep']/1e3:.1f}KB "
+            f"partitioned(padded)={rec['partitioned_padded_bytes_per_superstep']/1e3:.1f}KB "
+            f"reduction={'inf' if red is None else f'{red:.1f}'}x "
+            f"N/halo={'inf' if nph is None else f'{nph:.1f}'}",
+            flush=True,
+        )
+    if args.comm_only:
+        return
+
     n = 1 << args.scale
     e = n * 16
     mesh = make_production_mesh()

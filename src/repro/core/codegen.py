@@ -67,10 +67,19 @@ _REDUCE_TO_COMBINER = {
 @dataclasses.dataclass
 class _EdgeCtx:
     direction: str
-    nbr: jax.Array  # i32[E] neighbor ids (e.id)
-    vid: jax.Array  # i32[E] current-vertex id per edge (segment key, sorted)
+    nbr: jax.Array  # i32[E] neighbor ids (e.id) — global, value semantics
+    vid: jax.Array  # i32[E] current-vertex id per edge — global, value sem.
     w: jax.Array  # f32[E] e.w
     emask: jax.Array  # bool[E]
+    # addressing (== vid/nbr densely; local under a partitioned comm):
+    seg: jax.Array = None  # row index of the current vertex (segment key)
+    nbr_read: jax.Array = None  # address for reading per-row arrays at e.id
+
+    def __post_init__(self):
+        if self.seg is None:
+            self.seg = self.vid
+        if self.nbr_read is None:
+            self.nbr_read = self.nbr
 
 
 @dataclasses.dataclass
@@ -84,12 +93,25 @@ class _RemoteMsg:
 
 class StepExecutor:
     """Executes one Palgol step densely. Instantiated fresh per call so the
-    expression memo-cache is scoped to the step (paper's CSE guarantee)."""
+    expression memo-cache is scoped to the step (paper's CSE guarantee).
 
-    def __init__(self, step: ast.Step, graph):
+    ``comm`` selects the placement. ``None`` (default) is the dense /
+    replicated path: fields are ``[N]`` arrays, reads are plain gathers.
+    A :class:`repro.graph.partition.executor.ShardComm` makes this the
+    ``placement="partitioned"`` path: the executor then runs *inside* a
+    shard_map over per-shard field blocks ``[v_max]``, chain-access gathers
+    route through the halo layer's dynamic request/reply exchange, neighbor
+    reads through the static halo exchange, and remote-write scatters
+    through the combiner-aware reduce-scatter. Vertex *values* (ids) stay
+    global in both placements; only addressing changes.
+    """
+
+    def __init__(self, step: ast.Step, graph, comm=None):
         self.step = step
         self.graph = graph
+        self.comm = comm
         self.n = graph.n_vertices
+        self.nrows = comm.n_rows if comm is not None else graph.n_vertices
         self.info = analyze_step(step)
         self.pull = PullSolver()
 
@@ -117,7 +139,7 @@ class StepExecutor:
         self.nbr_cache: Dict[tuple, jax.Array] = dict(nbr_values or {})
         self.expr_cache: Dict[Tuple[int, ast.Expr], jax.Array] = {}
         self.pending: List[_RemoteMsg] = []
-        self.active = ~fields.get(HALTED, jnp.zeros((self.n,), jnp.bool_))
+        self.active = self._active_mask(fields)
         self._exec_stmts(self.step.body, mask=None, ectx=None)
         if split_remote:
             return self.new, self.pending
@@ -129,15 +151,37 @@ class StepExecutor:
         self.old = dict(fields)
         self.new = dict(fields)
         self.pending = pending
-        self.active = ~fields.get(HALTED, jnp.zeros((self.n,), jnp.bool_))
+        self.active = self._active_mask(fields)
         self._apply_remote()
         return self.new
 
     # -- helpers ------------------------------------------------------------
+    def _active_mask(self, fields) -> jax.Array:
+        active = ~fields.get(HALTED, jnp.zeros((self.nrows,), jnp.bool_))
+        if self.comm is not None:  # padding rows of a shard are never active
+            active = jnp.logical_and(active, self.comm.valid)
+        return active
+
     def _ids(self) -> jax.Array:
+        if self.comm is not None:
+            return self.comm.ids()
         return jnp.arange(self.n, dtype=jnp.int32)
 
+    def _gather_rows(self, arr: jax.Array, idx: jax.Array, fill=None):
+        """Read a per-row array at *global* vertex ids (possibly remote)."""
+        if self.comm is not None:
+            return self.comm.gather(arr, idx, fill)
+        return gops.gather(arr, idx, fill)
+
+    def _read_nbr(self, per_row: jax.Array, ectx: _EdgeCtx) -> jax.Array:
+        """Read a per-row array at each edge's neighbor (static halo path)."""
+        if self.comm is not None:
+            return self.comm.read_edge(per_row, ectx)
+        return gops.gather(per_row, ectx.nbr_read)
+
     def _edge_ctx(self, direction: str) -> _EdgeCtx:
+        if self.comm is not None:
+            return self.comm.edge_ctx(direction)
         nbr, vid, w, m = self.graph.edges(direction)
         return _EdgeCtx(direction, nbr, vid, w, m)
 
@@ -156,7 +200,7 @@ class StepExecutor:
             val = self._ids()
         elif len(pattern) == 1:
             val = self._field(pattern[0])
-        elif CHAIN_MODE == "naive":
+        elif CHAIN_MODE == "naive" and self.comm is None:
             # request/reply per hop: push the requester id to the owner
             # (a real scatter — the message traffic manual code pays),
             # then gather the owner's field (the reply)
@@ -169,10 +213,13 @@ class StepExecutor:
             # but the algebraic simplifier can't prove it
             val = val + (req // (self.n + 2)).astype(val.dtype)
         else:
+            # pull-mode pointer doubling: under a partitioned comm each
+            # doubling round is a dynamic cross-shard gather whose request
+            # set is rebuilt from the current indirection values
             plan = self.pull.solve(pattern)
             pre = self._chain_value(plan.prefix.pattern)
             suf = self._chain_value(plan.suffix.pattern)
-            val = gops.gather(suf, pre)
+            val = self._gather_rows(suf, pre)
         self.chain_cache[pattern] = val
         return val
 
@@ -198,7 +245,7 @@ class StepExecutor:
             if e.name in self.env:
                 ctx_tag, arr = self.env[e.name]
                 if ctx_tag == "vertex" and ectx is not None:
-                    return gops.gather(arr, ectx.vid)
+                    return gops.gather(arr, ectx.seg)
                 return arr
             raise CompileError(f"unbound variable {e.name!r}")
         if isinstance(e, ast.EdgeProp):
@@ -210,7 +257,7 @@ class StepExecutor:
             pat = chain_pattern_of(e, self.step.vertex_var)
             if pat is not None:
                 val = self._chain_value(pat)
-                return gops.gather(val, ectx.vid) if ectx is not None else val
+                return gops.gather(val, ectx.seg) if ectx is not None else val
             # neighborhood chain from e.id
             if ectx is not None:
                 npat = self._nbr_pattern(e)
@@ -219,10 +266,12 @@ class StepExecutor:
                     if cached is not None:
                         return cached
                     per_vertex = self._chain_value(npat)
-                    return gops.gather(per_vertex, ectx.nbr)
+                    return self._read_nbr(per_vertex, ectx)
             # general read
             idx = self._eval(e.index, ectx)
-            return gops.gather(self._field(e.field), jnp.asarray(idx, jnp.int32))
+            return self._gather_rows(
+                self._field(e.field), jnp.asarray(idx, jnp.int32)
+            )
         if isinstance(e, ast.Cond):
             c = self._eval(e.cond, ectx)
             t = self._eval(e.then, ectx)
@@ -260,30 +309,31 @@ class StepExecutor:
             fv = self._eval(f, ectx)
             mask = jnp.logical_and(mask, fv)
         if e.func == "count":
-            ones = jnp.ones_like(ectx.vid, dtype=jnp.int32)
+            ones = jnp.ones_like(ectx.seg, dtype=jnp.int32)
             return gops.segment_reduce(
-                ones, ectx.vid, self.n, "sum",
+                ones, ectx.seg, self.nrows, "sum",
                 indices_are_sorted=True, mask=mask,
             )
         body = self._eval(e.body, ectx)
         body = jnp.asarray(body)
         if body.ndim == 0:
-            body = jnp.broadcast_to(body, ectx.vid.shape)
+            body = jnp.broadcast_to(body, ectx.seg.shape)
         if e.func in ("argmin", "argmax"):
             comb = "min" if e.func == "argmin" else "max"
             best = gops.segment_reduce(
-                body, ectx.vid, self.n, comb, indices_are_sorted=True, mask=mask
+                body, ectx.seg, self.nrows, comb,
+                indices_are_sorted=True, mask=mask,
             )
-            attained = jnp.logical_and(mask, body == gops.gather(best, ectx.vid))
+            attained = jnp.logical_and(mask, body == gops.gather(best, ectx.seg))
             ids = jnp.where(attained, ectx.nbr, self.n)
             out = gops.segment_reduce(
-                ids, ectx.vid, self.n, "min", indices_are_sorted=True
+                ids, ectx.seg, self.nrows, "min", indices_are_sorted=True
             )
             # empty segments reduce to int-max; clamp to the sentinel (numV)
             return jnp.minimum(out, self.n)
         comb = _REDUCE_TO_COMBINER[e.func]
         return gops.segment_reduce(
-            body, ectx.vid, self.n, comb, indices_are_sorted=True, mask=mask
+            body, ectx.seg, self.nrows, comb, indices_are_sorted=True, mask=mask
         )
 
     # -- statement execution -------------------------------------------------
@@ -294,14 +344,14 @@ class StepExecutor:
                 val = jnp.asarray(val)
                 tag = "edge" if ectx is not None else "vertex"
                 if val.ndim == 0:
-                    shape = ectx.vid.shape if ectx is not None else (self.n,)
+                    shape = ectx.seg.shape if ectx is not None else (self.nrows,)
                     val = jnp.broadcast_to(val, shape)
                 self.env[s.var] = (tag, val)
             elif isinstance(s, ast.If):
                 c = self._eval(s.cond, ectx)
                 c = jnp.asarray(c)
                 if c.ndim == 0:
-                    shape = ectx.vid.shape if ectx is not None else (self.n,)
+                    shape = ectx.seg.shape if ectx is not None else (self.nrows,)
                     c = jnp.broadcast_to(c, shape)
                 m_then = c if mask is None else jnp.logical_and(mask, c)
                 self._exec_stmts(s.then, m_then, ectx)
@@ -312,7 +362,7 @@ class StepExecutor:
                 ec = self._edge_ctx(s.range.direction)
                 m = ec.emask
                 if mask is not None:  # lift vertex mask to edges
-                    m = jnp.logical_and(m, gops.gather(mask, ec.vid, fill=False))
+                    m = jnp.logical_and(m, gops.gather(mask, ec.seg, fill=False))
                 self._exec_stmts(s.body, m, ec)
             elif isinstance(s, ast.LocalWrite):
                 self._local_write(s, mask, ectx)
@@ -325,14 +375,14 @@ class StepExecutor:
         val = jnp.asarray(self._eval(s.value, ectx))
         if ectx is None:
             if val.ndim == 0:
-                val = jnp.broadcast_to(val, (self.n,))
+                val = jnp.broadcast_to(val, (self.nrows,))
             cur = self.new.get(s.field)
             if cur is None:
                 if s.op != ":=":
                     raise CompileError(
                         f"field {s.field!r} first written with accumulative op"
                     )
-                cur = jnp.zeros((self.n,), val.dtype)
+                cur = jnp.zeros((self.nrows,), val.dtype)
             updated = _OP_APPLY[s.op](cur, val).astype(cur.dtype)
             m = self.active if mask is None else jnp.logical_and(mask, self.active)
             self.new[s.field] = jnp.where(m, updated, cur)
@@ -343,7 +393,7 @@ class StepExecutor:
                 raise CompileError("`:=` inside an edge loop is order-dependent")
             comb = ast.OP_TO_COMBINER[s.op]
             if val.ndim == 0:
-                val = jnp.broadcast_to(val, ectx.vid.shape)
+                val = jnp.broadcast_to(val, ectx.seg.shape)
             m = ectx.emask if mask is None else mask
             cur = self.new.get(s.field)
             if cur is None:
@@ -351,7 +401,7 @@ class StepExecutor:
                     f"field {s.field!r} must exist before accumulation in a loop"
                 )
             seg = gops.segment_reduce(
-                val.astype(cur.dtype), ectx.vid, self.n, comb,
+                val.astype(cur.dtype), ectx.seg, self.nrows, comb,
                 indices_are_sorted=True, mask=m,
             )
             updated = _OP_APPLY[s.op](cur, seg).astype(cur.dtype)
@@ -360,14 +410,14 @@ class StepExecutor:
     def _remote_write(self, s: ast.RemoteWrite, mask, ectx: Optional[_EdgeCtx]):
         idx = jnp.asarray(self._eval(s.target, ectx), jnp.int32)
         val = jnp.asarray(self._eval(s.value, ectx))
-        shape = ectx.vid.shape if ectx is not None else (self.n,)
+        shape = ectx.seg.shape if ectx is not None else (self.nrows,)
         if idx.ndim == 0:
             idx = jnp.broadcast_to(idx, shape)
         if val.ndim == 0:
             val = jnp.broadcast_to(val, shape)
         # sender must be active
         sender_active = (
-            gops.gather(self.active, ectx.vid, fill=False)
+            gops.gather(self.active, ectx.seg, fill=False)
             if ectx is not None
             else self.active
         )
@@ -383,13 +433,38 @@ class StepExecutor:
                     f"remote write to undefined field {msg.field!r}"
                 )
             buf = self.new[msg.field]
+            comb = ast.OP_TO_COMBINER[msg.op]
+            if self.comm is not None:
+                # route the scatter through the halo layer's reduce-scatter:
+                # senders pre-combine locally, owners fold the delta in.
+                # Receiver-activity masking is local to the owner — halted
+                # receivers drop the whole combined delta, matching the
+                # dense per-message drop (all messages to a halted vertex
+                # are dropped together).
+                delta = self.comm.scatter_reduce(
+                    msg.idx, msg.values.astype(buf.dtype), comb, msg.mask
+                )
+                combined = _fold_combiner(comb, buf, delta)
+                mshape = self.active.shape + (1,) * (buf.ndim - 1)
+                self.new[msg.field] = jnp.where(
+                    self.active.reshape(mshape), combined, buf
+                )
+                continue
             # receiver must be active
             recv_active = gops.gather(self.active, msg.idx, fill=False)
             m = jnp.logical_and(msg.mask, recv_active)
-            comb = ast.OP_TO_COMBINER[msg.op]
             self.new[msg.field] = gops.scatter_combine(
                 buf, msg.idx, msg.values.astype(buf.dtype), comb, mask=m
             )
+
+
+def _fold_combiner(op: str, cur: jax.Array, delta: jax.Array) -> jax.Array:
+    """Fold a pre-combined remote-write delta into the live field.
+
+    ``delta`` is identity-valued where no message arrived, so the fold is a
+    no-op there — the partitioned equivalent of scatter's "unreduced rows
+    keep their value"."""
+    return gops.combine(op, cur, delta).astype(cur.dtype)
 
 
 def _binop(op: str, l, r):
@@ -424,23 +499,24 @@ def _binop(op: str, l, r):
     raise CompileError(f"unknown operator {op!r}")
 
 
-def make_stop_fn(stop: ast.StopStep, graph):
+def make_stop_fn(stop: ast.StopStep, graph, comm=None):
     """StopStep → fields update flipping the halted mask (paper §3.4)."""
 
     def stop_fn(fields):
         # reuse StepExecutor's evaluator on a synthetic empty step
-        ex = StepExecutor(ast.Step(stop.vertex_var, ()), graph)
+        ex = StepExecutor(ast.Step(stop.vertex_var, ()), graph, comm=comm)
         ex.old = dict(fields)
         ex.new = dict(fields)
         ex.env = {}
         ex.chain_cache = {}
+        ex.nbr_cache = {}
         ex.expr_cache = {}
         ex.pending = []
-        ex.active = ~fields.get(HALTED, jnp.zeros((graph.n_vertices,), jnp.bool_))
+        ex.active = ex._active_mask(fields)
         cond = jnp.asarray(ex._eval(stop.cond, None))
         if cond.ndim == 0:
-            cond = jnp.broadcast_to(cond, (graph.n_vertices,))
-        halted = fields.get(HALTED, jnp.zeros((graph.n_vertices,), jnp.bool_))
+            cond = jnp.broadcast_to(cond, (ex.nrows,))
+        halted = fields.get(HALTED, jnp.zeros((ex.nrows,), jnp.bool_))
         out = dict(fields)
         out[HALTED] = jnp.logical_or(halted, cond)
         return out

@@ -60,6 +60,7 @@ from repro.dist import compat  # noqa: F401  (installs jax mesh-API shims)
 
 ALL = "__all__"  #: every mesh axis, flattened (graph edge/node dims)
 BATCH = "__batch__"  #: the data-parallel group (pod × data)
+SHARD = "shard"  #: the 1-D vertex-partition axis (``repro.graph.partition``)
 
 #: physical axes belonging to the data-parallel group, in mesh order
 _DATA_AXES = ("pod", "data")
@@ -365,3 +366,50 @@ def replicated(x, mesh: Mesh) -> NamedSharding:
     """Fully-replicated sharding (optimizer step counters, scalars)."""
     del x
     return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# vertex-partition shardings (repro.graph.partition)
+
+
+def shard_mesh(n_shards: Optional[int] = None, devices=None) -> Mesh:
+    """1-D ``("shard",)`` mesh for partitioned vertex state.
+
+    The partitioned Pregel engine flattens whatever devices it is given
+    into one shard axis — one contiguous vertex range per device. Defaults
+    to every local device; pass ``n_shards`` to use a prefix of them.
+    """
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if n_shards is not None:
+        if n_shards > len(devs):
+            raise ValueError(
+                f"n_shards={n_shards} exceeds available devices ({len(devs)})"
+            )
+        devs = devs[:n_shards]
+    return Mesh(np.array(devs), (SHARD,))
+
+
+def vertex_partition_spec(ndim: int = 2) -> P:
+    """Spec for a ``[S, ...]`` per-shard block array: leading dim over
+    :data:`SHARD`, everything else replicated."""
+    return P(SHARD, *(None,) * (ndim - 1))
+
+
+def vertex_partition_shardings(tree, mesh: Mesh):
+    """Pytree of ``NamedSharding`` for partitioned per-shard arrays.
+
+    Leading dims that the shard axis divides evenly (the ``[S, ...]``
+    blocks of a ``PartitionedGraph`` and of partitioned fields) shard over
+    :data:`SHARD`; everything else — the ``[S+1]`` owner map, scalars —
+    replicates, per the :func:`_maybe` totality rule.
+    """
+
+    def leaf_sharding(leaf):
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _maybe((SHARD,), shape, mesh))
+
+    return jax.tree_util.tree_map(leaf_sharding, tree)

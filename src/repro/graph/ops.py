@@ -39,6 +39,41 @@ def _identity_for(op: str, dtype) -> jax.Array:
     return jnp.asarray(ident, dtype=dtype)
 
 
+#: elementwise combiner application — the single source for every site that
+#: folds two already-reduced values (remote-write deltas, cross-shard
+#: partials); keep in sync with COMBINE_IDENTITY above
+COMBINE_FN = {
+    "sum": jnp.add,
+    "prod": jnp.multiply,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "or": jnp.logical_or,
+    "and": jnp.logical_and,
+}
+
+
+def combine(op: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise ``a op b`` for a Palgol combiner."""
+    if op not in COMBINE_FN:
+        raise ValueError(f"unknown combiner {op!r}")
+    return COMBINE_FN[op](a, b)
+
+
+def combine_along_axis(op: str, arr: jax.Array, axis: int) -> jax.Array:
+    """Reduce one array axis with a Palgol combiner."""
+    reducers = {
+        "sum": jnp.sum,
+        "prod": jnp.prod,
+        "min": jnp.min,
+        "max": jnp.max,
+        "or": jnp.any,
+        "and": jnp.all,
+    }
+    if op not in reducers:
+        raise ValueError(f"unknown combiner {op!r}")
+    return reducers[op](arr, axis=axis)
+
+
 def segment_reduce(
     values: jax.Array,
     segment_ids: jax.Array,
@@ -194,13 +229,33 @@ def _dspec(daxes):
     return daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
 
 
+def _pad_rows(x: jax.Array, n_rows: int, fill) -> jax.Array:
+    """Pad the leading dim up to ``n_rows`` with a constant."""
+    pad = n_rows - x.shape[0]
+    if pad == 0:
+        return x
+    widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def mp_gather(field: jax.Array, idx: jax.Array, fill=None) -> jax.Array:
-    """Edge-sharded gather of (replicated) node state."""
+    """Edge-sharded gather of (replicated) node state.
+
+    An edge count the mesh does not divide is padded up with masked
+    sentinel rows (and the result sliced back) — the mesh path must never
+    silently fall back to the single-device gather just because ``E`` is
+    odd (that fallback replicates the ``[E, D]`` tensors GSPMD cannot
+    partition, the exact failure this wrapper exists to avoid).
+    """
     mesh, daxes, n_data = _mp_mesh()
-    if mesh is None or n_data == 1 or idx.shape[0] % n_data != 0:
+    if mesh is None or n_data == 1:
         return gather(field, idx, fill)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    e = idx.shape[0]
+    e_pad = -(-e // n_data) * n_data
+    idx_p = _pad_rows(idx, e_pad, 0)  # pad rows gather row 0, sliced off
 
     d = _dspec(daxes)
 
@@ -208,13 +263,14 @@ def mp_gather(field: jax.Array, idx: jax.Array, fill=None) -> jax.Array:
         return gather(f, i, fill)
 
     out_ndim = field.ndim - 1 + idx.ndim
-    return shard_map(
+    out = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(*(None,) * field.ndim), P(d)),
         out_specs=P(d, *(None,) * (out_ndim - 1)),
         check_rep=False,
-    )(field, idx)
+    )(field, idx_p)
+    return out[:e] if e_pad != e else out
 
 
 def _diff_pminmax(part: jax.Array, daxes, is_max: bool) -> jax.Array:
@@ -247,9 +303,14 @@ def mp_segment_reduce(
     op: str = "sum",
     mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Edge-sharded segment reduction → replicated node result."""
+    """Edge-sharded segment reduction → replicated node result.
+
+    Odd edge counts are padded to mesh divisibility with masked sentinel
+    rows (``segment_id = num_segments`` is dropped by the scatter) instead
+    of abandoning the mesh path.
+    """
     mesh, daxes, n_data = _mp_mesh()
-    if mesh is None or n_data == 1 or values.shape[0] % n_data != 0:
+    if mesh is None or n_data == 1:
         return segment_reduce(values, segment_ids, num_segments, op, mask=mask)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -257,6 +318,12 @@ def mp_segment_reduce(
     d = _dspec(daxes)
     if mask is None:
         mask = jnp.ones(values.shape[:1], jnp.bool_)
+    e = values.shape[0]
+    e_pad = -(-e // n_data) * n_data
+    if e_pad != e:
+        values = _pad_rows(values, e_pad, 0)
+        segment_ids = _pad_rows(segment_ids, e_pad, num_segments)
+        mask = _pad_rows(mask, e_pad, False)
 
     def local(v, s, m):
         part = segment_reduce(v, s, num_segments, op, mask=m)
@@ -289,9 +356,10 @@ def mp_edge_softmax(
     mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Numerically-stable softmax over edges grouped by destination,
-    composed from the mesh-aware primitives."""
+    composed from the mesh-aware primitives (which pad odd edge counts to
+    mesh divisibility internally)."""
     mesh, daxes, n_data = _mp_mesh()
-    if mesh is None or n_data == 1 or scores.shape[0] % n_data != 0:
+    if mesh is None or n_data == 1:
         return edge_softmax(scores, segment_ids, num_segments, mask=mask)
     seg_max = mp_segment_reduce(scores, segment_ids, num_segments, "max",
                                 mask=mask)

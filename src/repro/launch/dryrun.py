@@ -498,6 +498,41 @@ def dryrun_cell(arch_id: str, shape_id: str, mesh_kind: str,
     return rec
 
 
+def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
+    """Dry-run the partitioned Palgol layout at pod shard counts.
+
+    The partitioner is host-side, so validating the pod-scale layout needs
+    no devices at all: partition an R-MAT graph (the paper's power-law
+    regime) into one shard per production chip and record balance, halo
+    size, and projected per-superstep bytes vs the replicated layout.
+    Writes ``experiments/dryrun/palgol_partition.json``.
+    """
+    from repro.graph import generators as G
+    from repro.graph.partition import comm_bytes_report
+
+    g = G.rmat(scale, avg_degree=16.0, directed=True, seed=0)
+    rec = comm_bytes_report(g, n_shards)
+    stats = rec["partition"]
+    rec = dict(rec)
+    rec["status"] = "ok"
+    rec["balance"] = (
+        max(stats["pull_edges_per_shard"])
+        / max(1.0, stats["n_edges"] / n_shards)
+    )
+    path = OUT_DIR / "palgol_partition.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=2))
+    red = rec["reduction_vs_replicated"]
+    print(
+        f"palgol-partition: shards={n_shards} n={stats['n_vertices']} "
+        f"e={stats['n_edges']} balance={rec['balance']:.3f} "
+        f"halo_total={stats['halo_total']} "
+        f"reduction={'inf' if red is None else f'{red:.2f}'}x",
+        flush=True,
+    )
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -506,7 +541,15 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=str(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--palgol-partition", action="store_true",
+                    help="host-side pod-scale partition layout dry-run only")
+    ap.add_argument("--shards", type=int, default=256)
+    ap.add_argument("--graph-scale", type=int, default=18)
     args = ap.parse_args()
+
+    if args.palgol_partition:
+        palgol_partition_cell(args.shards, args.graph_scale)
+        return
 
     archs = configs.all_arch_ids() if (args.all or not args.arch) else [args.arch]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]

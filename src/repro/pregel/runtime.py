@@ -41,6 +41,17 @@ class BSPResult:
     trips: List[int]
 
 
+def _read_patterns(info) -> list:
+    """Chain patterns a step's read phase must materialize: vertex-context
+    chains plus multi-hop neighborhood chains. Shared by the staged stage
+    builder and :func:`read_superstep_count` so the two can never diverge."""
+    pats = set(info.chain_patterns)
+    for _, npat in info.nbr_comms:
+        if len(npat) > 1:
+            pats.add(npat)
+    return sorted(pats)
+
+
 class _StagedStep:
     """One Palgol step compiled to a list of superstep callables."""
 
@@ -50,11 +61,7 @@ class _StagedStep:
         self.schedule = schedule
         self.info = analyze_step(step)
         # chain patterns needed (vertex-context chains + neighborhood chains)
-        pats = set(self.info.chain_patterns)
-        for _, npat in self.info.nbr_comms:
-            if len(npat) > 1:
-                pats.add(npat)
-        self.patterns = sorted(pats)
+        self.patterns = _read_patterns(self.info)
         self._remote_schedule = None  # (field, op) order, discovered lazily
 
     # -- read supersteps -----------------------------------------------------
@@ -215,6 +222,25 @@ def _remote_write_descs(step: ast.Step) -> List[Tuple[str, str]]:
     return descs
 
 
+def read_superstep_count(step: ast.Step, schedule: str) -> int:
+    """Number of remote-reading supersteps a step costs under ``schedule``.
+
+    Mirrors ``len(_StagedStep.read_stage_fns())`` exactly (validated by the
+    partition equivalence tests) so alternative placements — e.g. the
+    partitioned executor, whose reads happen as collectives inside a fused
+    dispatch — charge the same superstep totals as the staged dense path.
+    """
+    info = analyze_step(step)
+    pats = _read_patterns(info)
+    if not pats and not info.nbr_comms:
+        return 0
+    if schedule == "pull":
+        return info.pull_read_rounds()
+    # naive: request + reply per chain hop, then one neighborhood send
+    n = sum(2 * (len(p) - 1) for p in pats)
+    return n + (1 if info.nbr_comms else 0)
+
+
 def _key(pattern) -> str:
     return "chain:" + "/".join(pattern)
 
@@ -223,24 +249,101 @@ def _nkey(direction, pattern) -> str:
     return f"nbr:{direction}:" + "/".join(pattern)
 
 
+def walk_program(
+    prog: ast.Prog,
+    fields,
+    exec_step,
+    exec_stop,
+    counter: List[int],
+    trips: List[int],
+    max_iters: int,
+):
+    """Host-side superstep walk shared by every placement.
+
+    ``exec_step(step, fields)`` / ``exec_stop(stop, fields)`` execute one
+    Step / StopStep (and account their own supersteps in ``counter``); this
+    walker owns sequencing, the iteration Init superstep (paper Fig. 11),
+    trip counting, and the host-side OR-aggregator fixed-point check — so
+    iteration semantics cannot diverge between the replicated and
+    partitioned executors.
+    """
+
+    def run(p, flds):
+        if isinstance(p, ast.Step):
+            return exec_step(p, flds)
+        if isinstance(p, ast.StopStep):
+            return exec_stop(p, flds)
+        if isinstance(p, ast.Seq):
+            for q in p.progs:
+                flds = run(q, flds)
+            return flds
+        if isinstance(p, ast.Iter):
+            # the iteration Init superstep: sets up the OR-aggregator so
+            # the first termination check succeeds
+            counter[0] += 1
+            trips.append(0)
+            slot = len(trips) - 1
+            limit = p.fixed_trips if p.fixed_trips is not None else max_iters
+            for _ in range(limit):
+                before = {f: flds[f] for f in p.fix_fields}
+                flds = run(p.body, flds)
+                trips[slot] += 1
+                if p.fix_fields:
+                    # host-side aggregator round-trip (Pregel OR-aggregator)
+                    changed = any(
+                        bool(jnp.any(flds[f] != before[f]))
+                        for f in p.fix_fields
+                    )
+                    if not changed:
+                        break
+            return flds
+        raise TypeError(type(p))
+
+    return run(prog, fields)
+
+
 def run_bsp(
     prog: ast.Prog,
     graph,
     fields: Dict[str, jax.Array],
     schedule: str = "pull",
     max_iters: int = 100_000,
+    placement: str = "replicated",
+    mesh=None,
+    n_shards: Optional[int] = None,
 ) -> BSPResult:
     """Execute a Palgol program superstep-by-superstep.
 
     ``fields`` must be the full canonical field dict (use
     ``CompiledProgram.init_fields``). Returns final fields, the number of
     actually executed supersteps, and per-iteration trip counts.
+
+    ``placement`` selects the vertex-state layout:
+
+    * ``"replicated"`` (default) — dense single-address-space arrays; under
+      an active mesh GSPMD/shard_map keep vertex state replicated per chip;
+    * ``"partitioned"`` — edge-balanced contiguous-range shards with halo
+      exchange (``repro.graph.partition``): each superstep moves only
+      boundary state. ``mesh`` (a 1-D ``("shard",)`` mesh) or ``n_shards``
+      selects the layout; defaults to one shard per local device. Fields
+      are partitioned on entry and returned dense, so callers are
+      placement-agnostic.
     """
+    if placement == "partitioned":
+        from repro.graph.partition import run_bsp_partitioned
+
+        return run_bsp_partitioned(
+            prog, graph, fields, schedule=schedule, max_iters=max_iters,
+            mesh=mesh, n_shards=n_shards,
+        )
+    if placement != "replicated":
+        raise ValueError(f"unknown placement {placement!r}")
     counter = [0]
     trips: List[int] = []
-    # cache compiled stage functions per Step node: supersteps re-execute
-    # across iterations without re-tracing (as a real Pregel binary would)
-    cache: Dict[int, tuple] = {}
+    # cache compiled stage functions per Step/StopStep node: supersteps
+    # re-execute across iterations without re-tracing (as a real Pregel
+    # binary would)
+    cache: Dict[int, object] = {}
 
     def exec_step(step: ast.Step, flds):
         if id(step) not in cache:
@@ -263,40 +366,16 @@ def run_bsp(
             counter[0] += 1
         return new
 
-    def run(p, flds):
-        if isinstance(p, ast.Step):
-            return exec_step(p, flds)
-        if isinstance(p, ast.StopStep):
-            counter[0] += 1
-            return jax.jit(make_stop_fn(p, graph))(flds)
-        if isinstance(p, ast.Seq):
-            for q in p.progs:
-                flds = run(q, flds)
-            return flds
-        if isinstance(p, ast.Iter):
-            # the iteration Init superstep (paper Fig. 11): sets up the
-            # OR-aggregator so the first termination check succeeds
-            counter[0] += 1
-            trips.append(0)
-            slot = len(trips) - 1
-            limit = p.fixed_trips if p.fixed_trips is not None else max_iters
-            for _ in range(limit):
-                before = {f: flds[f] for f in p.fix_fields}
-                flds = run(p.body, flds)
-                trips[slot] += 1
-                if p.fix_fields:
-                    # host-side aggregator round-trip (Pregel OR-aggregator)
-                    changed = any(
-                        bool(jnp.any(flds[f] != before[f]))
-                        for f in p.fix_fields
-                    )
-                    if not changed:
-                        break
-            return flds
-        raise TypeError(type(p))
+    def exec_stop(stop: ast.StopStep, flds):
+        if id(stop) not in cache:
+            cache[id(stop)] = jax.jit(make_stop_fn(stop, graph))
+        counter[0] += 1
+        return cache[id(stop)](flds)
 
     fields = {k: jnp.asarray(v) for k, v in fields.items()}
     if HALTED not in fields:
         fields[HALTED] = jnp.zeros((graph.n_vertices,), jnp.bool_)
-    out = run(prog, fields)
+    out = walk_program(
+        prog, fields, exec_step, exec_stop, counter, trips, max_iters
+    )
     return BSPResult(fields=out, supersteps=counter[0], trips=trips)

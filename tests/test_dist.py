@@ -9,6 +9,7 @@ results to the single-device reference paths.
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -134,6 +135,31 @@ SUBPROCESS_TEST = textwrap.dedent(
     assert np.allclose(np.asarray(mp_s), np.asarray(ref_s), atol=1e-5), "mp_sum"
     assert np.allclose(np.asarray(mp_m), np.asarray(ref_m)), "mp_max"
     assert np.all(np.isfinite(np.asarray(gmax))), "mp_max grad"
+
+    # --- odd edge count: mesh path pads, never silently falls back ------
+    eo = 257  # 257 % 8 != 0
+    srco = jnp.asarray(rng.integers(0, n, eo).astype(np.int32))
+    dsto = jnp.asarray(rng.integers(0, n, eo).astype(np.int32))
+    masko = jnp.asarray(rng.random(eo) < 0.9)
+    ref_go = gops.gather(xfeat, srco)
+    ref_so = gops.segment_reduce(ref_go, dsto, n, "sum", mask=masko)
+    ref_sm = gops.edge_softmax(ref_go[:, 0], dsto, n, mask=masko)
+    shd.activate(mesh)
+    with mesh:
+        mp_go = jax.jit(lambda f, i: gops.mp_gather(f, i))(xfeat, srco)
+        mp_so = jax.jit(
+            lambda v, s, m: gops.mp_segment_reduce(v, s, n, "sum", mask=m)
+        )(ref_go, dsto, masko)
+        mp_smo = jax.jit(
+            lambda v, s, m: gops.mp_edge_softmax(v, s, n, mask=m)
+        )(ref_go[:, 0], dsto, masko)
+    shd.deactivate()
+    assert mp_go.shape == ref_go.shape, "odd-E gather shape"
+    assert np.allclose(np.asarray(mp_go), np.asarray(ref_go)), "odd-E gather"
+    assert np.allclose(
+        np.asarray(mp_so), np.asarray(ref_so), atol=1e-5), "odd-E segsum"
+    assert np.allclose(
+        np.asarray(mp_smo), np.asarray(ref_sm), atol=1e-6), "odd-E softmax"
     print("SUBPROCESS_OK")
     """
 )
@@ -146,7 +172,7 @@ def test_multidevice_semantics():
         capture_output=True,
         text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        timeout=500,
-        cwd="/root/repo",
+        timeout=900,
+        cwd=str(Path(__file__).resolve().parent.parent),
     )
     assert "SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
