@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithms as alg
-from repro.core import codegen, compile_program
+from repro.core import compile_program
 from repro.core import ast as past
 from repro.dist import sharding as shd
 from repro.graph.structure import Graph
@@ -78,12 +78,12 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
     init_fields = None
     if algo == "chain4":
         init_fields = {"D": jnp.zeros((64,), jnp.int32)}
-    cp = compile_program(src, small, initial_fields=init_fields)
+    cp = compile_program(src, small, initial_fields=init_fields, schedule=mode)
     body = one_iteration_prog(cp.prog)
     import dataclasses
 
     cp_body = dataclasses.replace(
-        compile_program(src, small, initial_fields=init_fields),
+        compile_program(src, small, initial_fields=init_fields, schedule=mode),
         prog=body, n_iters=0,
     )
     ag = abstract_graph(n, e)
@@ -96,19 +96,15 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
     fshard = shd.batch_shardings("gnn", fields, mesh)
     gshard = shd.batch_shardings("gnn", ag, mesh)
 
-    codegen.CHAIN_MODE = mode
-    try:
-        def step(flds, graph):
-            out, _ = cp_body.fn(flds, graph=graph)
-            return out
+    def step(flds, graph):
+        out, _ = cp_body.fn(flds, graph=graph)
+        return out
 
-        with mesh:
-            lowered = jax.jit(
-                step, in_shardings=(fshard, gshard), out_shardings=fshard
-            ).lower(fields, ag)
-            compiled = lowered.compile()
-    finally:
-        codegen.CHAIN_MODE = "pull"
+    with mesh:
+        lowered = jax.jit(
+            step, in_shardings=(fshard, gshard), out_shardings=fshard
+        ).lower(fields, ag)
+        compiled = lowered.compile()
     # cost_analysis() is a dict on jax ≥ 0.4.38, a one-element list before
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -169,6 +165,60 @@ def comm_comparison(n_shards: int = 8) -> dict:
     }
 
 
+def schedule_report(
+    algos=("sssp", "wcc", "sv", "chain4", "pagerank"), n_shards: int = 8
+) -> dict:
+    """Per-schedule superstep counts and bytes-per-superstep, derived from
+    the plan IR (``repro.core.plan``) — the (executor × schedule) cost
+    surface in one artifact.
+
+    For each algorithm and each schedule (pull / naive / auto) we lower
+    every step to its StepPlan, execute once on a small graph to get real
+    trip counts, and report: the per-step op lists, total executed
+    supersteps (the STM cost model evaluated on the measured trips — equal
+    to what both the staged and the partitioned executor actually charge),
+    and the partitioned layout's padded bytes × supersteps per iteration
+    on the grid graph (what one fixed-point round costs on the wire).
+    """
+    from repro.graph import generators as G
+    from repro.graph.partition import comm_bytes_report
+
+    grid = G.grid2d(512, 8)
+    grid_bytes = comm_bytes_report(grid, n_shards)[
+        "partitioned_padded_bytes_per_superstep"
+    ]
+    small = G.erdos_renyi(64, 4.0, directed=False, weighted=True, seed=0)
+    out = {}
+    for algo in algos:
+        init_fields = None
+        if algo == "chain4":
+            init_fields = {"D": jnp.zeros((64,), jnp.int32)}
+        cp = compile_program(alg.ALL[algo], small, initial_fields=init_fields)
+        _, trips, counts = cp.run(init_fields)
+        from repro.core.plan import program_plan_records
+
+        cell = {}
+        for sched in ("pull", "naive", "auto"):
+            key = {"pull": "pull_staged", "naive": "naive", "auto": "auto"}[sched]
+            total = counts[key]
+            cell[sched] = {
+                "steps": program_plan_records(cp.step_plans(sched)),
+                "executed_supersteps": total,
+                "grid_padded_bytes_total": total * grid_bytes,
+            }
+        out[algo] = cell
+    return {
+        "n_shards": n_shards,
+        "grid_padded_bytes_per_superstep": grid_bytes,
+        "per_algo": out,
+        "note": (
+            "superstep counts are plan-derived (len(StepPlan.ops) per step, "
+            "STM cost model on measured trips); bytes are the grid graph's "
+            "partitioned padded per-superstep cost times executed supersteps"
+        ),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=26,
@@ -181,8 +231,12 @@ def main():
     args = ap.parse_args()
 
     bench = comm_comparison(args.shards)
+    bench["schedules"] = schedule_report(n_shards=args.shards)
     repo_root = Path(__file__).resolve().parent.parent
     (repo_root / "BENCH_palgol_mesh.json").write_text(json.dumps(bench, indent=1))
+    for algo, cell in bench["schedules"]["per_algo"].items():
+        per = {s: cell[s]["executed_supersteps"] for s in cell}
+        print(f"{algo}: supersteps {per}", flush=True)
     for gname, rec in bench["per_graph"].items():
         red = rec["reduction_vs_replicated"]
         nph = rec["vertices_per_halo_entry"]

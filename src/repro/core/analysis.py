@@ -71,6 +71,17 @@ class StepInfo:
             rounds = max(rounds, 1)
         return rounds
 
+    def read_patterns(self) -> List[logic.Pattern]:
+        """Chain patterns the read phase must materialize: vertex-context
+        chains plus multi-hop neighborhood chains (evaluated at the
+        neighbor before the send). The shared input of every schedule's
+        lowering in :mod:`repro.core.plan`."""
+        pats = set(self.chain_patterns)
+        for _, npat in self.nbr_comms:
+            if len(npat) > 1:
+                pats.add(npat)
+        return sorted(pats)
+
     def has_remote_writes(self) -> bool:
         return bool(self.remote_write_fields)
 

@@ -23,6 +23,7 @@ collectives inserted by GSPMD when fields are sharded.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -31,18 +32,37 @@ import jax.numpy as jnp
 from repro.core import ast
 from repro.core.analysis import CompileError, analyze_step, chain_pattern_of, neighbor_pattern_of
 from repro.core.logic import PullSolver
+from repro.core.plan import (
+    MainCompute,
+    ReadRound,
+    StepPlan,
+    lower_step,
+)
 from repro.graph import ops as gops
 
 HALTED = "_halted"
 
-# Chain-access evaluation mode for the dense executor:
-#   "pull"  — PullSolver gather DAG (pointer doubling; the optimized
-#             schedule this framework contributes beyond the paper);
-#   "naive" — hop-by-hop request/reply: each hop pays an address scatter
-#             (the request message) plus a gather (the reply) — the wire
-#             traffic of hand-written Pregel code, used as the §Perf
-#             baseline when lowering Palgol programs on the mesh.
+# DEPRECATED (kept one release as a shim): the mutable module-global that
+# used to select the chain-access schedule. The schedule is now an explicit
+# ``schedule=`` argument on StepExecutor / compile_program / run_bsp (the
+# plan IR in repro.core.plan made the global redundant). If a caller still
+# pokes this global and does not pass ``schedule=``, the poked value is
+# honored with a DeprecationWarning.
 CHAIN_MODE = "pull"
+
+
+def resolve_schedule(schedule: Optional[str]) -> str:
+    """Explicit ``schedule=`` argument, else the deprecated CHAIN_MODE shim."""
+    if schedule is not None:
+        return schedule
+    if CHAIN_MODE != "pull":
+        warnings.warn(
+            "repro.core.codegen.CHAIN_MODE is deprecated; pass "
+            "schedule=... to compile_program / StepExecutor instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return CHAIN_MODE
 
 _OP_APPLY = {
     ":=": lambda cur, val: val,
@@ -92,8 +112,13 @@ class _RemoteMsg:
 
 
 class StepExecutor:
-    """Executes one Palgol step densely. Instantiated fresh per call so the
+    """Executes one Palgol step densely by folding its :class:`StepPlan`
+    op list into one traced computation. Instantiated fresh per call so the
     expression memo-cache is scoped to the step (paper's CSE guarantee).
+
+    ``plan`` (or ``schedule``, which lowers one) selects the superstep
+    expansion — the same :func:`repro.core.plan.lower_step` plan the staged
+    and partitioned executors consume, so the three can never diverge.
 
     ``comm`` selects the placement. ``None`` (default) is the dense /
     replicated path: fields are ``[N]`` arrays, reads are plain gathers.
@@ -106,13 +131,23 @@ class StepExecutor:
     global in both placements; only addressing changes.
     """
 
-    def __init__(self, step: ast.Step, graph, comm=None):
+    def __init__(
+        self,
+        step: ast.Step,
+        graph,
+        comm=None,
+        plan: Optional[StepPlan] = None,
+        schedule: Optional[str] = None,
+    ):
         self.step = step
         self.graph = graph
         self.comm = comm
         self.n = graph.n_vertices
         self.nrows = comm.n_rows if comm is not None else graph.n_vertices
-        self.info = analyze_step(step)
+        if plan is None:
+            plan = lower_step(step, schedule=resolve_schedule(schedule))
+        self.plan = plan
+        self.info = plan.info
         self.pull = PullSolver()
 
     # -- public -------------------------------------------------------------
@@ -123,12 +158,13 @@ class StepExecutor:
         split_remote: bool = False,
         nbr_values: Optional[Dict[tuple, jax.Array]] = None,
     ):
-        """Run the step's LC phase (+ RU phase unless ``split_remote``).
+        """Execute the plan's ops in order (fused into this one trace).
 
         ``chain_values`` seeds the chain cache with buffers materialized by
-        earlier remote-reading supersteps (BSP mode); ``nbr_values`` seeds
-        per-edge neighborhood buffers keyed by ``(direction, pattern)``. In
-        dense mode the gathers are inlined here instead.
+        earlier remote-reading supersteps (BSP mode) — seeded ReadRound
+        work is skipped; ``nbr_values`` seeds per-edge neighborhood buffers
+        keyed by ``(direction, pattern)``. In dense mode the rounds inline
+        their gathers here instead.
         With ``split_remote=True`` returns ``(fields, pending_messages)`` so
         a separate remote-updating superstep can apply them (paper Fig. 9).
         """
@@ -139,11 +175,17 @@ class StepExecutor:
         self.nbr_cache: Dict[tuple, jax.Array] = dict(nbr_values or {})
         self.expr_cache: Dict[Tuple[int, ast.Expr], jax.Array] = {}
         self.pending: List[_RemoteMsg] = []
+        self._naive_req: Dict[tuple, jax.Array] = {}
         self.active = self._active_mask(fields)
-        self._exec_stmts(self.step.body, mask=None, ectx=None)
+        for op in self.plan.ops:
+            if isinstance(op, ReadRound):
+                self._exec_read_round(op)
+            elif isinstance(op, MainCompute):
+                self._exec_stmts(self.step.body, mask=None, ectx=None)
+            elif not split_remote:  # RemoteUpdate
+                self._apply_remote()
         if split_remote:
             return self.new, self.pending
-        self._apply_remote()
         return self.new
 
     def apply_remote(self, fields, pending: List[_RemoteMsg]):
@@ -193,25 +235,17 @@ class StepExecutor:
         return self.old[name]
 
     def _chain_value(self, pattern: tuple) -> jax.Array:
-        """Evaluate a chain pattern at every vertex (schedule per CHAIN_MODE)."""
+        """Evaluate a chain pattern at every vertex. The plan's ReadRound
+        ops materialize every multi-hop pattern before the main compute, so
+        during statement execution this resolves axioms (vertex ids, single
+        fields) and cache hits; the pull-DAG fallback covers synthetic
+        steps that run without plan rounds (stop conditions)."""
         if pattern in self.chain_cache:
             return self.chain_cache[pattern]
         if len(pattern) == 0:
             val = self._ids()
         elif len(pattern) == 1:
             val = self._field(pattern[0])
-        elif CHAIN_MODE == "naive" and self.comm is None:
-            # request/reply per hop: push the requester id to the owner
-            # (a real scatter — the message traffic manual code pays),
-            # then gather the owner's field (the reply)
-            cur = self._chain_value(pattern[:-1])
-            req = jnp.full((self.n + 1,), self.n, jnp.int32)
-            req = req.at[cur].set(self._ids(), mode="drop")[: self.n]
-            val = gops.gather(self._field(pattern[-1]), cur)
-            # keep the request scatter alive (its wire cost is what we're
-            # modeling): req < n+2 always, so this term is exactly zero,
-            # but the algebraic simplifier can't prove it
-            val = val + (req // (self.n + 2)).astype(val.dtype)
         else:
             # pull-mode pointer doubling: under a partitioned comm each
             # doubling round is a dynamic cross-shard gather whose request
@@ -222,6 +256,49 @@ class StepExecutor:
             val = self._gather_rows(suf, pre)
         self.chain_cache[pattern] = val
         return val
+
+    # -- plan-op execution ---------------------------------------------------
+    def _exec_read_round(self, op: ReadRound):
+        """Fold one remote-reading superstep into the trace.
+
+        Work whose result is already cached (seeded by a staged mailbox)
+        is skipped — the op then only accounts for its superstep.
+        """
+        if op.kind == "request":
+            # naive hop, requester→owner address push. Under a partitioned
+            # comm the paired reply's gather_global pays the request
+            # exchange for real; densely we keep the address scatter alive
+            # so the lowered HLO carries the wire traffic manual code pays.
+            if self.comm is not None:
+                return
+            for ce in op.chains:
+                if ce.pattern in self.chain_cache:
+                    continue
+                cur = self._chain_value(ce.prefix)
+                req = jnp.full((self.n + 1,), self.n, jnp.int32)
+                self._naive_req[ce.pattern] = req.at[cur].set(
+                    self._ids(), mode="drop"
+                )[: self.n]
+            return
+        for ce in op.chains:  # kind "pull" or "reply": gather suffix@prefix
+            if ce.pattern in self.chain_cache:
+                continue
+            pre = self._chain_value(ce.prefix)
+            suf = self._chain_value(ce.suffix)
+            val = self._gather_rows(suf, pre)
+            req = self._naive_req.pop(ce.pattern, None)
+            if req is not None:
+                # fold in the request buffer: req < n+2 always, so this
+                # term is exactly zero, but the algebraic simplifier can't
+                # prove it — the scatter survives into the lowering
+                val = val + (req // (self.n + 2)).astype(val.dtype)
+            self.chain_cache[ce.pattern] = val
+        for direction, npat in op.nbr_sends:
+            if (direction, npat) in self.nbr_cache:
+                continue
+            per_vertex = self._chain_value(npat)
+            ectx = self._edge_ctx(direction)
+            self.nbr_cache[(direction, npat)] = self._read_nbr(per_vertex, ectx)
 
     # -- expression evaluation ----------------------------------------------
     def _eval(self, e: ast.Expr, ectx: Optional[_EdgeCtx]):

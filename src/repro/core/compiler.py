@@ -20,8 +20,9 @@ import jax.numpy as jnp
 from repro.core import ast
 from repro.core import parser as palgol_parser
 from repro.core import stm as stm_mod
-from repro.core.analysis import CompileError
-from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
+from repro.core.analysis import CompileError, iter_steps
+from repro.core.codegen import HALTED, StepExecutor, make_stop_fn, resolve_schedule
+from repro.core.plan import SCHEDULES, StepPlan, lower_step
 
 
 def _iter_nodes(prog: ast.Prog) -> List[ast.Iter]:
@@ -48,6 +49,24 @@ class CompiledProgram:
     n_iters: int
     max_iters: int
     cost_models: Dict[str, stm_mod.CostModel]
+    # chain-access schedule the fused trace lowers under ("pull" | "naive" |
+    # "auto"); None defers to the deprecated codegen.CHAIN_MODE shim at
+    # trace time (which defaults to "pull")
+    schedule: Optional[str] = None
+
+    def step_plans(
+        self, schedule: Optional[str] = None
+    ) -> List[tuple]:
+        """``(step, StepPlan)`` for every Step node, in program order —
+        what ``fn`` folds into the trace (dry-run / benchmark surface)."""
+        sched = resolve_schedule(
+            schedule if schedule is not None else self.schedule
+        )
+        return [
+            (s, lower_step(s, schedule=sched))
+            for s in iter_steps(self.prog)
+            if isinstance(s, ast.Step)
+        ]
 
     def init_fields(self, user_fields: Optional[Dict[str, jax.Array]] = None):
         """Canonical field dict: user fields + zero-init for created fields."""
@@ -76,10 +95,17 @@ class CompiledProgram:
         graph = graph if graph is not None else self.graph
         iter_ids = {id(node): i for i, node in enumerate(_iter_nodes(self.prog))}
         trips0 = jnp.zeros((max(self.n_iters, 1),), jnp.int32)
+        sched = resolve_schedule(self.schedule)
+        plans: Dict[int, StepPlan] = {}
+
+        def plan_for(step: ast.Step) -> StepPlan:
+            if id(step) not in plans:
+                plans[id(step)] = lower_step(step, schedule=sched)
+            return plans[id(step)]
 
         def run(p: ast.Prog, flds, trips):
             if isinstance(p, ast.Step):
-                return StepExecutor(p, graph)(flds), trips
+                return StepExecutor(p, graph, plan=plan_for(p))(flds), trips
             if isinstance(p, ast.StopStep):
                 return make_stop_fn(p, graph)(flds), trips
             if isinstance(p, ast.Seq):
@@ -144,7 +170,9 @@ def _discover_fields(prog, graph, fields_struct):
 
     def step_pass(step, fs):
         def f(flds):
-            return StepExecutor(step, graph)(flds)
+            # field discovery is schedule-independent (identical shapes /
+            # dtypes under every schedule) — pin pull for determinism
+            return StepExecutor(step, graph, schedule="pull")(flds)
 
         return dict(jax.eval_shape(f, fs))
 
@@ -185,18 +213,29 @@ def compile_program(
     graph,
     initial_fields: Optional[Dict[str, jax.Array]] = None,
     max_iters: int = 100_000,
+    schedule: Optional[str] = None,
 ) -> CompiledProgram:
     """Compile Palgol source (or AST) against a graph.
 
     ``initial_fields`` supplies dtypes/values of pre-existing fields; fields
     created by the program (via ``local F[v] := ...``) are discovered with an
     abstract-evaluation pass and zero-initialized.
+
+    ``schedule`` selects the chain-access lowering the fused trace folds
+    in (``"pull"`` — pointer-doubling gather DAG, ``"naive"`` — per-hop
+    request/reply wire-cost model, ``"auto"`` — per-step cheapest by plan
+    op count). ``None`` defers to the deprecated ``codegen.CHAIN_MODE``
+    shim, i.e. effectively ``"pull"``.
     """
     prog = (
         palgol_parser.parse(source_or_ast)
         if isinstance(source_or_ast, str)
         else source_or_ast
     )
+    if schedule is not None and schedule not in SCHEDULES:
+        raise CompileError(
+            f"unknown schedule {schedule!r}; expected one of {SCHEDULES}"
+        )
     n = graph.n_vertices
     fs: Dict[str, jax.ShapeDtypeStruct] = {
         HALTED: jax.ShapeDtypeStruct((n,), jnp.bool_)
@@ -213,4 +252,5 @@ def compile_program(
         n_iters=len(_iter_nodes(prog)),
         max_iters=max_iters,
         cost_models=cost_models,
+        schedule=schedule,
     )

@@ -1,0 +1,269 @@
+"""The superstep-plan IR: one canonical lowering of Palgol steps.
+
+The paper's compilation story (§5) is a single expansion of each Palgol
+step into Pregel supersteps: remote-reading supersteps that materialize the
+chain-access buffers, one main (local-computation) superstep, and one
+remote-updating superstep when the step has remote writes. This module is
+the *only* place that expansion lives: :func:`lower_step` lowers a step to
+a :class:`StepPlan` — a typed list of superstep ops — and every executor
+consumes the plan instead of re-deriving it:
+
+* the fused dense compiler (``repro.core.codegen.StepExecutor``) folds the
+  op list into its single traced computation;
+* the staged BSP executor (``repro.pregel.runtime``) dispatches one device
+  call per op;
+* the partitioned executor (``repro.graph.partition.executor``) maps each
+  op onto its halo collective (``ReadRound`` → ``gather_global`` /
+  ``halo_exchange``, ``RemoteUpdate`` → ``scatter_reduce``).
+
+One op is one Pregel superstep, so ``len(plan.ops)`` *is* the step's
+superstep cost — the STM cost models (``repro.core.stm``) count plan ops
+directly, and accounting can never diverge from execution by construction.
+
+Schedules
+---------
+``"pull"``
+    The logic-system-derived one-sided schedule: chain patterns evaluate
+    through the :class:`~repro.core.logic.PullSolver` gather DAG, one
+    ``ReadRound`` per DAG depth (pointer doubling — ``D⁴`` in 2 rounds);
+    neighborhood sends piggyback on the round after their chain is ready.
+``"naive"``
+    Hand-written-Pregel request/reply: every chain hop costs a *request*
+    round (push requester ids to the owner — a real scatter) and a *reply*
+    round (the owner returns the value), sequentially per pattern, plus one
+    neighborhood-send round. The wire traffic manual code pays.
+``"auto"``
+    Per-step selection: lower under both schedules and keep the plan with
+    fewer ops (ties go to ``pull``). This is the STM-cost-driven choice —
+    the plan's own op count is the superstep cost model — following the
+    channel-composition line of Zhang & Hu (1811.01669) and the push/pull
+    selection knob of iPregel (2010.08781).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core import ast
+from repro.core.analysis import StepInfo, analyze_step
+from repro.core.logic import Pattern, PullSolver
+
+#: the schedules lower_step accepts
+SCHEDULES = ("pull", "naive", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainEval:
+    """One gather: materialize ``pattern`` as ``eval(suffix)[eval(prefix)]``.
+
+    Both operands are already-materialized patterns (or axioms: ``()`` is
+    the vertex id, a single field is a local array read). Pull rounds use
+    the PullSolver's balanced split; naive hops always split off the last
+    field (``prefix = pattern[:-1]``, ``suffix = (pattern[-1],)``).
+    """
+
+    pattern: Pattern
+    prefix: Pattern
+    suffix: Pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadRound:
+    """One remote-reading superstep.
+
+    ``kind``:
+
+    * ``"pull"`` — one pull-solver gather round (``chains`` are the DAG
+      nodes at this depth; ``nbr_sends`` piggyback once their chain is
+      ready);
+    * ``"request"`` — naive hop, requester→owner address scatter for the
+      single entry in ``chains`` (no value materialized);
+    * ``"reply"`` — naive hop, owner→requester value gather (materializes
+      ``chains[0].pattern``);
+    * ``"nbr_send"`` — the naive schedule's neighborhood-send superstep
+      (``nbr_sends`` only).
+    """
+
+    kind: str
+    chains: Tuple[ChainEval, ...] = ()
+    nbr_sends: Tuple[Tuple[str, Pattern], ...] = ()  # (direction, pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class MainCompute:
+    """The main superstep: local computation + emitting remote writes."""
+
+    emits_remote: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteUpdate:
+    """The remote-updating superstep: apply combined messages at owners."""
+
+    writes: Tuple[Tuple[str, str], ...]  # (field, op) in program order
+
+
+PlanOp = object  # ReadRound | MainCompute | RemoteUpdate
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """A Palgol step lowered to its superstep op list.
+
+    ``schedule`` is the *resolved* schedule (``pull``/``naive``);
+    ``requested`` records what the caller asked for (may be ``auto``).
+    """
+
+    step: ast.Step
+    info: StepInfo
+    schedule: str
+    requested: str
+    ops: Tuple[PlanOp, ...]
+
+    @property
+    def n_supersteps(self) -> int:
+        """Superstep cost of one execution of this step — the accounting
+        contract: one op is one superstep."""
+        return len(self.ops)
+
+    @property
+    def read_rounds(self) -> int:
+        return sum(1 for op in self.ops if isinstance(op, ReadRound))
+
+    @property
+    def has_remote_update(self) -> bool:
+        return any(isinstance(op, RemoteUpdate) for op in self.ops)
+
+    @property
+    def materialized(self) -> Tuple[Pattern, ...]:
+        """Every chain pattern some ReadRound materializes (mailbox keys of
+        the staged executor), in materialization order."""
+        out: List[Pattern] = []
+        for op in self.ops:
+            if isinstance(op, ReadRound) and op.kind in ("pull", "reply"):
+                out.extend(ce.pattern for ce in op.chains)
+        return tuple(dict.fromkeys(out))
+
+    def describe(self) -> str:
+        """Compact one-line rendering for dry-runs and logs."""
+        parts = []
+        for op in self.ops:
+            if isinstance(op, ReadRound):
+                items = [".".join(ce.pattern) for ce in op.chains]
+                items += [f"{d}:{'.'.join(p) or 'Id'}" for d, p in op.nbr_sends]
+                parts.append(f"RR[{op.kind}{' ' if items else ''}{' '.join(items)}]")
+            elif isinstance(op, MainCompute):
+                parts.append("Main")
+            else:
+                parts.append(
+                    "RU[" + " ".join(f"{f}{o}" for f, o in op.writes) + "]"
+                )
+        return " -> ".join(parts)
+
+
+def remote_write_descs(step: ast.Step) -> Tuple[Tuple[str, str], ...]:
+    """(field, op) of every remote write, in static program order — the
+    message-descriptor contract between MainCompute and RemoteUpdate."""
+    return tuple(
+        (s.field, s.op)
+        for s in ast.walk_stmts(step.body)
+        if isinstance(s, ast.RemoteWrite)
+    )
+
+
+def _tail(ops: List[PlanOp], step: ast.Step, info: StepInfo) -> List[PlanOp]:
+    ops.append(MainCompute(emits_remote=info.has_remote_writes()))
+    if info.has_remote_writes():
+        ops.append(RemoteUpdate(writes=remote_write_descs(step)))
+    return ops
+
+
+def _lower_pull(step: ast.Step, info: StepInfo) -> List[PlanOp]:
+    ops: List[PlanOp] = []
+    pats = info.read_patterns()
+    # general (computed-index) reads inline their gather into an existing
+    # round's dispatch, but still cost at least one remote-reading
+    # superstep (pull_read_rounds' floor) — a step with only general reads
+    # gets one chain-less round
+    if pats or info.nbr_comms or info.general_reads:
+        solver = PullSolver()
+        order = solver.schedule(pats)
+        depth = {p: solver.solve(p).rounds for p in order}
+        total_rounds = info.pull_read_rounds()
+        # neighborhood sends fire at round rounds(pattern)+1
+        nbr_round = {
+            (d, p): solver.rounds(p) + 1 for d, p in info.nbr_comms
+        }
+        for r in range(1, total_rounds + 1):
+            chains = tuple(
+                ChainEval(
+                    p,
+                    solver.solve(p).prefix.pattern,
+                    solver.solve(p).suffix.pattern,
+                )
+                for p in order
+                if depth.get(p) == r and len(p) > 1
+            )
+            sends = tuple(sorted(k for k, rr in nbr_round.items() if rr == r))
+            ops.append(ReadRound("pull", chains, sends))
+    return _tail(ops, step, info)
+
+
+def _lower_naive(step: ast.Step, info: StepInfo) -> List[PlanOp]:
+    ops: List[PlanOp] = []
+    for p in info.read_patterns():
+        for k in range(2, len(p) + 1):
+            prefix = p[:k]
+            hop = ChainEval(prefix, prefix[:-1], (prefix[-1],))
+            ops.append(ReadRound("request", (hop,)))
+            ops.append(ReadRound("reply", (hop,)))
+    # each general (computed-index) read is one request/reply conversation
+    # in manual code; the value itself is consumed inline in the main
+    # superstep, so the rounds carry no chains — they cost supersteps only
+    for _ in range(info.general_reads):
+        ops.append(ReadRound("request"))
+        ops.append(ReadRound("reply"))
+    if info.nbr_comms:
+        ops.append(ReadRound("nbr_send", (), tuple(sorted(info.nbr_comms))))
+    return _tail(ops, step, info)
+
+
+def program_plan_records(step_plans) -> List[dict]:
+    """JSON-ready records for ``CompiledProgram.step_plans()`` output — the
+    one rendering the benchmark report and the partition dry-run share."""
+    return [
+        {
+            "resolved": plan.schedule,
+            "read_rounds": plan.read_rounds,
+            "supersteps": plan.n_supersteps,
+            "ops": plan.describe(),
+        }
+        for _, plan in step_plans
+    ]
+
+
+def lower_step(
+    step: ast.Step,
+    info: Optional[StepInfo] = None,
+    schedule: str = "pull",
+) -> StepPlan:
+    """Lower a Palgol step to its :class:`StepPlan` under ``schedule``.
+
+    The one canonical superstep expansion — every executor and the STM
+    cost models consume this.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; expected one of {SCHEDULES}"
+        )
+    info = info if info is not None else analyze_step(step)
+    if schedule == "auto":
+        pull = StepPlan(step, info, "pull", "auto", tuple(_lower_pull(step, info)))
+        naive = StepPlan(
+            step, info, "naive", "auto", tuple(_lower_naive(step, info))
+        )
+        # the plan's own op count IS the superstep cost model; ties → pull
+        return pull if pull.n_supersteps <= naive.n_supersteps else naive
+    ops = _lower_pull(step, info) if schedule == "pull" else _lower_naive(step, info)
+    return StepPlan(step, info, schedule, schedule, tuple(ops))

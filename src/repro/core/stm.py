@@ -34,6 +34,7 @@ from typing import Dict, List, Tuple
 
 from repro.core import ast
 from repro.core.analysis import analyze_step
+from repro.core import plan as plan_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,28 +82,31 @@ class CostModel:
 
 
 def _step_states(step: ast.Step, mode: str) -> List[State]:
-    info = analyze_step(step)
-    if mode == "naive":
-        # sequential request/reply per chain + separate neighborhood send
-        solver_rounds = 0
-        for p in info.chain_patterns:
-            solver_rounds += 2 * (len(p) - 1)  # query/reply per hop
-        for _, p in info.nbr_comms:
-            solver_rounds += 2 * (len(p) - 1)  # chains hanging off e.id
-        solver_rounds += 2 * info.general_reads
-        if info.nbr_comms:
-            solver_rounds += 1  # the neighborhood send superstep
-        read_rounds = solver_rounds
-    elif mode == "push":
+    if mode == "push":
+        # paper-faithful message-passing plans — an accounting-only regime
+        # (no executor runs it), still derived from the PushSolver
+        info = analyze_step(step)
         read_rounds = info.push_read_rounds()
-    elif mode == "pull":
-        read_rounds = info.pull_read_rounds()
-    else:
+        states = [State("read", f"rr{i}") for i in range(read_rounds)]
+        states.append(State("main", "main"))
+        if info.has_remote_writes():
+            states.append(State("update", "ru"))
+        return states
+    if mode not in plan_mod.SCHEDULES:
         raise ValueError(f"unknown mode {mode!r}")
-    states = [State("read", f"rr{i}") for i in range(read_rounds)]
-    states.append(State("main", "main"))
-    if info.has_remote_writes():
-        states.append(State("update", "ru"))
+    # executable schedules: one State per plan op — the cost model counts
+    # the very op list the executors dispatch, so they cannot diverge
+    plan = plan_mod.lower_step(step, schedule=mode)
+    states: List[State] = []
+    ri = 0
+    for op in plan.ops:
+        if isinstance(op, plan_mod.ReadRound):
+            states.append(State("read", f"rr{ri}"))
+            ri += 1
+        elif isinstance(op, plan_mod.MainCompute):
+            states.append(State("main", "main"))
+        else:
+            states.append(State("update", "ru"))
     return states
 
 
@@ -208,11 +212,15 @@ def superstep_report(prog: ast.Prog) -> Dict[str, CostModel]:
     * ``pull_staged``  — pull schedule without merging/fusion (matches the
       staged BSP executor's actually-executed count);
     * ``naive``        — request/reply chains, no merging/fusion (the
-      "straightforward"/manual baseline the paper compares against).
+      "straightforward"/manual baseline the paper compares against);
+    * ``auto``         — per-step cheapest of pull/naive by plan op count,
+      unfused (matches ``schedule="auto"`` execution on both the staged
+      and the partitioned executor).
     """
     return {
         "palgol_push": build_stm(prog, "push", optimize=True)[1],
         "palgol_pull": build_stm(prog, "pull", optimize=True)[1],
         "pull_staged": build_stm(prog, "pull", optimize=False)[1],
         "naive": build_stm(prog, "naive", optimize=False)[1],
+        "auto": build_stm(prog, "auto", optimize=False)[1],
     }

@@ -140,10 +140,13 @@ class TrainSupervisor:
                 self.retries += 1
                 if self.retries > self.max_retries:
                     raise
-                # restore-and-replay from last durable state
+                # restore-and-replay from last durable state; an in-flight
+                # async save is durable too — join it before scanning, or a
+                # failure right after ckpt.save() replays from much older
+                # state than necessary
+                self.ckpt.wait()
                 ls = latest_step(self.ckpt_dir)
                 if ls is not None:
-                    self.ckpt.wait()
                     state, step, _ = restore_checkpoint(
                         self.ckpt_dir, init_state, mesh=mesh,
                         sharding_fn=sharding_fn,

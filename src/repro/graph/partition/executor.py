@@ -6,21 +6,22 @@
 but each Palgol step executes as ONE shard_map dispatch over the
 :class:`~repro.graph.partition.partitioner.PartitionedGraph` layout. Inside
 the shard_map body the unchanged :class:`~repro.core.codegen.StepExecutor`
-runs with a :class:`ShardComm`, which routes every cross-vertex access
-through the halo layer:
+runs with a :class:`ShardComm`, folding the step's
+:class:`~repro.core.plan.StepPlan` ops onto the halo collectives:
 
-* neighborhood reads (``F[e.id]``) → static :func:`~.halo.halo_exchange`
-  (moves only boundary state);
-* chain accesses (``D[D[u]]``) → :func:`~.halo.gather_global` per pull
-  round (pointer doubling rebuilds its request halo from the current
-  indirection field);
-* remote writes → :func:`~.halo.scatter_reduce` + a local fold at the
+* ``ReadRound`` for neighborhood sends (``F[e.id]``) → static
+  :func:`~.halo.halo_exchange` (moves only boundary state);
+* ``ReadRound`` for chain accesses (``D[D[u]]``) →
+  :func:`~.halo.gather_global` — once per pull round (pointer doubling
+  rebuilds its request halo from the current indirection field), or once
+  per hop under ``schedule="naive"`` (the gather_global exchange *is* the
+  request/reply pair, so the hop's two supersteps are charged honestly);
+* ``RemoteUpdate`` → :func:`~.halo.scatter_reduce` + a local fold at the
   owner.
 
-Superstep accounting matches the staged dense executor exactly (same
-read-round counts from the chain logic system, one main superstep, one
-remote-updating superstep when the step has remote writes), so STM
-cross-checks carry over unchanged.
+Superstep accounting is ``plan.n_supersteps`` — the identical plan the
+staged dense executor dispatches — so STM cross-checks carry over by
+construction, for every schedule (``pull``/``naive``/``auto``).
 """
 
 from __future__ import annotations
@@ -34,8 +35,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ast
-from repro.core.analysis import analyze_step
 from repro.core.codegen import HALTED, StepExecutor, _EdgeCtx, make_stop_fn
+from repro.core.plan import StepPlan, lower_step
 from repro.graph import ops as gops
 from repro.graph.partition import halo
 from repro.graph.partition.partitioner import (
@@ -44,7 +45,7 @@ from repro.graph.partition.partitioner import (
     partition_graph,
     unpartition_fields,
 )
-from repro.pregel.runtime import BSPResult, read_superstep_count, walk_program
+from repro.pregel.runtime import BSPResult, walk_program
 
 AXIS = halo.AXIS
 
@@ -193,10 +194,12 @@ def _make_sharded_fn(pg: PartitionedGraph, mesh, field_keys, make_local_fn):
     )
 
 
-def _make_step_fn(step: ast.Step, pg: PartitionedGraph, mesh, field_keys):
+def _make_step_fn(
+    step: ast.Step, plan: StepPlan, pg: PartitionedGraph, mesh, field_keys
+):
     return _make_sharded_fn(
         pg, mesh, field_keys,
-        lambda pgl, comm: StepExecutor(step, pgl, comm=comm),
+        lambda pgl, comm: StepExecutor(step, pgl, comm=comm, plan=plan),
     )
 
 
@@ -225,15 +228,11 @@ def run_bsp_partitioned(
     Same contract as :func:`repro.pregel.runtime.run_bsp` (canonical field
     dict in, final *dense* fields + superstep count + trips out); the graph
     is partitioned over ``mesh`` (default: a 1-D mesh over all local
-    devices, built by :func:`repro.dist.sharding.shard_mesh`). Only the
-    ``"pull"`` schedule is supported — the naive request/reply emulation is
-    a wire-cost model for the dense path, not a placement.
+    devices, built by :func:`repro.dist.sharding.shard_mesh`). Every
+    schedule runs here: ``"pull"`` (pointer-doubled gather_global rounds),
+    ``"naive"`` (one gather_global per chain hop — the honest request/reply
+    wire cost), ``"auto"`` (cheapest per step by plan op count).
     """
-    if schedule != "pull":
-        raise ValueError(
-            "placement='partitioned' supports schedule='pull' only "
-            f"(got {schedule!r})"
-        )
     from repro.dist import sharding as shd
 
     if mesh is None:
@@ -256,13 +255,11 @@ def run_bsp_partitioned(
 
     def exec_step(step: ast.Step, flds):
         if id(step) not in cache:
-            info = analyze_step(step)
-            n_ss = (
-                read_superstep_count(step, schedule)
-                + 1
-                + (1 if info.has_remote_writes() else 0)
+            plan = lower_step(step, schedule=schedule)
+            cache[id(step)] = (
+                _make_step_fn(step, plan, pg, mesh, keys),
+                plan.n_supersteps,
             )
-            cache[id(step)] = (_make_step_fn(step, pg, mesh, keys), n_ss)
         fn, n_ss = cache[id(step)]
         counter[0] += n_ss
         return fn(flds, pg)

@@ -498,13 +498,39 @@ def dryrun_cell(arch_id: str, shape_id: str, mesh_kind: str,
     return rec
 
 
+def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4")) -> dict:
+    """Per-step superstep plans (repro.core.plan) for the representative
+    programs, under every schedule — what the partitioned executor will
+    dispatch, printed so a pod-scale dry-run shows the op-by-op shape of
+    each superstep before any device exists."""
+    import jax.numpy as jnp
+
+    from repro.core import algorithms as alg, compile_program
+    from repro.core.plan import SCHEDULES, program_plan_records
+    from repro.graph import generators as G
+
+    small = G.erdos_renyi(64, 4.0, directed=False, weighted=True, seed=0)
+    out = {}
+    for name in algos:
+        init_fields = None
+        if name == "chain4":
+            init_fields = {"D": jnp.zeros((64,), jnp.int32)}
+        cp = compile_program(alg.ALL[name], small, initial_fields=init_fields)
+        out[name] = {
+            sched: program_plan_records(cp.step_plans(sched))
+            for sched in SCHEDULES
+        }
+    return out
+
+
 def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
     """Dry-run the partitioned Palgol layout at pod shard counts.
 
     The partitioner is host-side, so validating the pod-scale layout needs
     no devices at all: partition an R-MAT graph (the paper's power-law
     regime) into one shard per production chip and record balance, halo
-    size, and projected per-superstep bytes vs the replicated layout.
+    size, projected per-superstep bytes vs the replicated layout, and the
+    per-step superstep plans each schedule would dispatch.
     Writes ``experiments/dryrun/palgol_partition.json``.
     """
     from repro.graph import generators as G
@@ -519,6 +545,15 @@ def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
         max(stats["pull_edges_per_shard"])
         / max(1.0, stats["n_edges"] / n_shards)
     )
+    rec["step_plans"] = _palgol_step_plans()
+    for name, cell in rec["step_plans"].items():
+        for sched, steps in cell.items():
+            for i, s in enumerate(steps):
+                print(
+                    f"plan {name} step{i} [{sched}->{s['resolved']}] "
+                    f"({s['supersteps']} ss): {s['ops']}",
+                    flush=True,
+                )
     path = OUT_DIR / "palgol_partition.json"
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(rec, indent=2))

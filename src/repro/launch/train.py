@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
@@ -23,10 +24,18 @@ from repro import configs
 from repro.data.pipeline import gnn_full_batch, recsys_batches, token_batches
 from repro.dist import sharding as shd
 from repro.ft import FailureInjector, StragglerMonitor, TrainSupervisor
+from repro.launch.mesh import make_mesh
 from repro.models.gnn import models as gm
 from repro.models.recsys import autoint
 from repro.models.transformer import model as tm
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_mesh():
+    """2-D ``(data, model)`` mesh over the local devices (model=1: the live
+    loop is DP/FSDP-first; the dry-run explores wider model axes). One
+    device degrades to a 1×1 mesh, so every sharding spec still resolves."""
+    return make_mesh((jax.device_count(), 1), ("data", "model"))
 
 
 def build(arch: str, reduced: bool, batch: int, seq: int, seed: int):
@@ -55,7 +64,7 @@ def build(arch: str, reduced: bool, batch: int, seq: int, seed: int):
                               seed=seed)
         batches = [next(data) for _ in range(16)]
         batch_for_step = lambda i: batches[i % len(batches)]
-    return cfg, params, loss_fn, batch_for_step
+    return spec, cfg, params, loss_fn, batch_for_step
 
 
 def main():
@@ -75,14 +84,41 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    cfg, params, loss_fn, batch_for_step = build(
+    spec, cfg, params, loss_fn, batch_for_step = build(
         args.arch, args.reduced, args.batch, args.seq, args.seed
     )
     oc = AdamWConfig(lr=args.lr)
     opt = adamw_init(params, oc)
     state = {"params": params, "opt": opt}
 
-    @jax.jit
+    # explicit placement instead of letting jit infer it: params by the
+    # family's path-keyed rules, optimizer moments sharded like the params,
+    # batches over the mesh's data group — and the old state donated, so
+    # params/opt update in place (no 2× state footprint per step)
+    mesh = make_train_mesh()
+    shd.activate(mesh)
+    pshard = shd.param_shardings(spec.family, params, mesh)
+    state_shard = {
+        "params": pshard,
+        "opt": {
+            "m": pshard,
+            "v": pshard,
+            "step": shd.replicated(jnp.zeros(()), mesh),
+        },
+    }
+    bshard = shd.batch_shardings(spec.family, batch_for_step(0), mesh)
+    # the donating step consumes its input buffers, so the supervisor's
+    # restore-and-replay template must be durable: hand it a host-side
+    # snapshot (dispatch device_puts it per in_shardings; steps after the
+    # first flow device-to-device)
+    state = jax.device_get(state)
+
+    @functools.partial(
+        jax.jit,
+        in_shardings=(state_shard, bshard),
+        out_shardings=(state_shard, None),
+        donate_argnums=(0,),
+    )
     def step_fn(state, batch):
         p, o = state["params"], state["opt"]
         loss, g = jax.value_and_grad(loss_fn)(p, batch)

@@ -1,36 +1,35 @@
 """Staged BSP executor: one device dispatch per Pregel superstep.
 
-Execution model (mirrors paper Fig. 9):
+Execution model (mirrors paper Fig. 9): each Palgol step is lowered by
+:func:`repro.core.plan.lower_step` to a :class:`~repro.core.plan.StepPlan`
+— remote-reading supersteps, a main superstep, a remote-updating superstep
+— and this runtime dispatches **one jitted device call per plan op**:
 
-* each Palgol step expands into: remote-reading supersteps (materializing
-  chain-access buffers round by round), a main superstep (local computation +
-  emitting remote-write messages), and a remote-updating superstep;
-* ``schedule="pull"`` stages chain reads by the PullSolver gather DAG
+* ``schedule="pull"`` plans chain reads by the PullSolver gather DAG
   (this framework's optimized one-sided schedule);
 * ``schedule="naive"`` emulates the hand-written request/reply style: every
   chain hop costs a *request* superstep (push requester ids to the owner —
   a real scatter, matching the message traffic of manual Pregel code) and a
   *reply* superstep (the owner sends the value back — a gather);
+* ``schedule="auto"`` picks the cheaper plan per step (by op count);
 * fixed-point termination is checked on host between supersteps, exactly like
   Pregel's aggregator round-trip.
 
 The executed-superstep count is returned and cross-checked in tests against
-the STM cost models of ``repro.core.stm``.
+the STM cost models of ``repro.core.stm`` — both count the same plan ops.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ast
-from repro.core.analysis import analyze_step
 from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
-from repro.core.logic import PullSolver
+from repro.core.plan import ReadRound, RemoteUpdate, lower_step
 from repro.graph import ops as gops
 
 
@@ -41,128 +40,61 @@ class BSPResult:
     trips: List[int]
 
 
-def _read_patterns(info) -> list:
-    """Chain patterns a step's read phase must materialize: vertex-context
-    chains plus multi-hop neighborhood chains. Shared by the staged stage
-    builder and :func:`read_superstep_count` so the two can never diverge."""
-    pats = set(info.chain_patterns)
-    for _, npat in info.nbr_comms:
-        if len(npat) > 1:
-            pats.add(npat)
-    return sorted(pats)
-
-
 class _StagedStep:
-    """One Palgol step compiled to a list of superstep callables."""
+    """One Palgol step: its :class:`StepPlan` compiled to a list of
+    superstep callables — one jitted device dispatch per plan op."""
 
     def __init__(self, step: ast.Step, graph, schedule: str):
         self.step = step
         self.graph = graph
-        self.schedule = schedule
-        self.info = analyze_step(step)
-        # chain patterns needed (vertex-context chains + neighborhood chains)
-        self.patterns = _read_patterns(self.info)
-        self._remote_schedule = None  # (field, op) order, discovered lazily
+        self.plan = lower_step(step, schedule=schedule)
+        self.info = self.plan.info
+        self.schedule = self.plan.schedule  # resolved (auto → pull/naive)
 
     # -- read supersteps -----------------------------------------------------
     def read_stage_fns(self):
-        """List of jitted (fields, mailbox) -> mailbox functions; one per
-        remote-reading superstep."""
-        if not self.patterns and not self.info.nbr_comms:
-            return []
-        if self.schedule == "pull":
-            return self._pull_read_stages()
-        return self._naive_read_stages()
+        """List of jitted ``(fields, mailbox) -> mailbox`` functions; one
+        per ReadRound op of the plan."""
+        return [
+            self._stage_fn(op)
+            for op in self.plan.ops
+            if isinstance(op, ReadRound)
+        ]
 
-    def _nbr_send(self, mailbox_out, fields, mailbox_in):
-        """Materialize per-edge neighborhood buffers (the 'send' superstep)."""
-        for direction, npat in sorted(self.info.nbr_comms):
-            nbr, _, _, _ = self.graph.edges(direction)
-            val = self._lookup(fields, mailbox_in, npat)
-            mailbox_out[_nkey(direction, npat)] = gops.gather(val, nbr)
+    def _stage_fn(self, op: ReadRound):
+        if op.kind == "request":
 
-    def _pull_read_stages(self):
-        """One stage per gather round: chain DAG nodes grouped by depth, and
-        the neighborhood send piggybacked on the round after its chain is
-        ready (matching StepInfo.pull_read_rounds)."""
-        solver = PullSolver()
-        order = solver.schedule(self.patterns)
-        depth = {p: solver.solve(p).rounds for p in order}
-        total_rounds = self.info.pull_read_rounds()
-        # neighborhood sends fire at round rounds(pattern)+1
-        nbr_round = {
-            (d, p): solver.rounds(p) + 1 for d, p in self.info.nbr_comms
-        }
-        stages = []
-        for r in range(1, total_rounds + 1):
-            todo = tuple(p for p in order if depth.get(p) == r and len(p) > 1)
-            sends = tuple(k for k, rr in nbr_round.items() if rr == r)
-
-            def stage(fields, mailbox, _todo=todo, _sends=sends, _solver=solver):
+            def request(fields, mailbox, _op=op):
+                # requester u pushes its id to the owner vertex (real
+                # scatter: the message traffic manual Pregel code pays)
                 out = dict(mailbox)
-                for p in _todo:
-                    plan = _solver.solve(p)
-                    pre = self._lookup(fields, out, plan.prefix.pattern)
-                    suf = self._lookup(fields, out, plan.suffix.pattern)
-                    out[_key(p)] = gops.gather(suf, pre)
-                for direction, npat in _sends:
-                    nbr, _, _, _ = self.graph.edges(direction)
-                    val = self._lookup(fields, out, npat)
-                    out[_nkey(direction, npat)] = gops.gather(val, nbr)
-                return out
-
-            stages.append(jax.jit(stage))
-        return stages
-
-    def _naive_read_stages(self):
-        """Request/reply per hop, sequentially per pattern (manual style),
-        then one neighborhood-send superstep."""
-        stages = []
-        chain_pats = list(self.patterns)
-        # chains hanging off e.id also resolve hop by hop in manual code
-        for _, npat in sorted(self.info.nbr_comms):
-            if len(npat) > 1 and npat not in chain_pats:
-                chain_pats.append(npat)
-        for p in chain_pats:
-            for k in range(2, len(p) + 1):
-                prefix = p[:k]
-
-                def request(fields, mailbox, _prefix=prefix):
-                    # requester u pushes its id to the owner vertex (real
-                    # scatter: the message traffic manual Pregel code pays)
-                    out = dict(mailbox)
-                    owner = self._lookup(fields, out, _prefix[:-1])
+                for ce in _op.chains:
+                    owner = self._lookup(fields, out, ce.prefix)
                     ids = jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
                     reqbuf = jnp.full_like(ids, self.graph.n_vertices)
-                    out[_key(_prefix) + ":req"] = reqbuf.at[owner].set(
+                    out[_key(ce.pattern) + ":req"] = reqbuf.at[owner].set(
                         ids, mode="drop"
                     )
-                    return out
-
-                def reply(fields, mailbox, _prefix=prefix):
-                    # owner replies with its field value → requester buffer
-                    out = dict(mailbox)
-                    owner = self._lookup(fields, out, _prefix[:-1])
-                    val = (
-                        jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
-                        if _prefix[-1] == "Id"
-                        else fields[_prefix[-1]]
-                    )
-                    out[_key(_prefix)] = gops.gather(val, owner)
-                    out.pop(_key(_prefix) + ":req", None)
-                    return out
-
-                stages.append(jax.jit(request))
-                stages.append(jax.jit(reply))
-        if self.info.nbr_comms:
-
-            def send(fields, mailbox):
-                out = dict(mailbox)
-                self._nbr_send(out, fields, mailbox)
                 return out
 
-            stages.append(jax.jit(send))
-        return stages
+            return jax.jit(request)
+
+        def stage(fields, mailbox, _op=op):
+            # "pull": one gather-DAG round; "reply": the owner returns its
+            # value to the requester; "nbr_send": per-edge buffers
+            out = dict(mailbox)
+            for ce in _op.chains:
+                pre = self._lookup(fields, out, ce.prefix)
+                suf = self._lookup(fields, out, ce.suffix)
+                out[_key(ce.pattern)] = gops.gather(suf, pre)
+                out.pop(_key(ce.pattern) + ":req", None)
+            for direction, npat in _op.nbr_sends:
+                nbr, _, _, _ = self.graph.edges(direction)
+                val = self._lookup(fields, out, npat)
+                out[_nkey(direction, npat)] = gops.gather(val, nbr)
+            return out
+
+        return jax.jit(stage)
 
     def _lookup(self, fields, mailbox, pattern):
         if len(pattern) == 0:
@@ -175,18 +107,19 @@ class _StagedStep:
 
     # -- main + update supersteps ---------------------------------------------
     def main_fn(self):
-        has_ru = self.info.has_remote_writes()
+        has_ru = self.plan.has_remote_update
+        materialized = self.plan.materialized
 
         def main(fields, mailbox):
             chain_values = {
-                p: mailbox[_key(p)] for p in self.patterns if _key(p) in mailbox
+                p: mailbox[_key(p)] for p in materialized if _key(p) in mailbox
             }
             nbr_values = {
                 (d, p): mailbox[_nkey(d, p)]
                 for d, p in self.info.nbr_comms
                 if _nkey(d, p) in mailbox
             }
-            ex = StepExecutor(self.step, self.graph)
+            ex = StepExecutor(self.step, self.graph, plan=self.plan)
             if has_ru:
                 new, pending = ex(
                     fields, chain_values, split_remote=True, nbr_values=nbr_values
@@ -198,47 +131,28 @@ class _StagedStep:
         return jax.jit(main)
 
     def update_fn(self):
+        ru = next(
+            op for op in self.plan.ops if isinstance(op, RemoteUpdate)
+        )
+
         def update(fields, payload):
-            ex = StepExecutor(self.step, self.graph)
-            # rebuild message descriptors: (field, op) order is the static
-            # program order of remote writes, discovered from the AST
-            descs = _remote_write_descs(self.step)
+            ex = StepExecutor(self.step, self.graph, plan=self.plan)
             from repro.core.codegen import _RemoteMsg
 
             msgs = [
                 _RemoteMsg(f, op, idx, val, mask)
-                for (f, op), (idx, val, mask) in zip(descs, payload)
+                for (f, op), (idx, val, mask) in zip(ru.writes, payload)
             ]
             return ex.apply_remote(fields, msgs)
 
         return jax.jit(update)
 
 
-def _remote_write_descs(step: ast.Step) -> List[Tuple[str, str]]:
-    descs = []
-    for s in ast.walk_stmts(step.body):
-        if isinstance(s, ast.RemoteWrite):
-            descs.append((s.field, s.op))
-    return descs
-
-
 def read_superstep_count(step: ast.Step, schedule: str) -> int:
-    """Number of remote-reading supersteps a step costs under ``schedule``.
-
-    Mirrors ``len(_StagedStep.read_stage_fns())`` exactly (validated by the
-    partition equivalence tests) so alternative placements — e.g. the
-    partitioned executor, whose reads happen as collectives inside a fused
-    dispatch — charge the same superstep totals as the staged dense path.
-    """
-    info = analyze_step(step)
-    pats = _read_patterns(info)
-    if not pats and not info.nbr_comms:
-        return 0
-    if schedule == "pull":
-        return info.pull_read_rounds()
-    # naive: request + reply per chain hop, then one neighborhood send
-    n = sum(2 * (len(p) - 1) for p in pats)
-    return n + (1 if info.nbr_comms else 0)
+    """Number of remote-reading supersteps a step costs under ``schedule``
+    — ``lower_step(step).read_rounds``, the same plan every executor
+    dispatches, so placements cannot diverge from the accounting."""
+    return lower_step(step, schedule=schedule).read_rounds
 
 
 def _key(pattern) -> str:
@@ -318,6 +232,9 @@ def run_bsp(
     ``CompiledProgram.init_fields``). Returns final fields, the number of
     actually executed supersteps, and per-iteration trip counts.
 
+    ``schedule`` ∈ {"pull", "naive", "auto"} selects the chain-access
+    lowering (see :mod:`repro.core.plan`) and applies to both placements.
+
     ``placement`` selects the vertex-state layout:
 
     * ``"replicated"`` (default) — dense single-address-space arrays; under
@@ -352,7 +269,7 @@ def run_bsp(
                 staged,
                 staged.read_stage_fns(),
                 staged.main_fn(),
-                staged.update_fn() if staged.info.has_remote_writes() else None,
+                staged.update_fn() if staged.plan.has_remote_update else None,
             )
         staged, read_fns, main_fn, update_fn = cache[id(step)]
         mailbox: Dict[str, jax.Array] = {}

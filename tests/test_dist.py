@@ -165,6 +165,7 @@ SUBPROCESS_TEST = textwrap.dedent(
 )
 
 
+@pytest.mark.subprocess_mesh
 def test_multidevice_semantics():
     """EP MoE + shard_map MP match single-device refs on an 8-device mesh."""
     res = subprocess.run(

@@ -19,6 +19,7 @@ from types import SimpleNamespace
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -230,6 +231,7 @@ EDGE_SOFTMAX_SUBPROCESS = textwrap.dedent(
 )
 
 
+@pytest.mark.subprocess_mesh
 def test_mp_edge_softmax_multidevice():
     """mp_edge_softmax matches edge_softmax on an 8-fake-device mesh."""
     res = subprocess.run(

@@ -263,12 +263,12 @@ class TestPartitionedExecutionSingleShard:
             ), f
         assert res.supersteps == counts["pull_staged"]
 
-    def test_rejects_naive_schedule(self):
+    def test_rejects_unknown_schedule(self):
         g = G.cycle(8)
         cp = compile_program(alg.WCC, g)
         with pytest.raises(ValueError):
             run_bsp(
-                cp.prog, g, cp.init_fields(), schedule="naive",
+                cp.prog, g, cp.init_fields(), schedule="bogus",
                 placement="partitioned", n_shards=1,
             )
 
@@ -366,6 +366,7 @@ SUBPROCESS_TEST = textwrap.dedent(
 )
 
 
+@pytest.mark.subprocess_mesh
 def test_partitioned_multidevice_equivalence():
     """SSSP + CC (+ SV, chain4) on the 8-fake-device mesh: bit-identical
     fields and identical STM superstep counts vs the dense path."""

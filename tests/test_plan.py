@@ -1,0 +1,340 @@
+"""Superstep-plan IR tests (`repro.core.plan`).
+
+Four layers:
+
+* plan structure: op lists under pull/naive, one op == one superstep
+  (`len(plan.ops)` is the accounting contract), chain4's known shapes;
+* the ``auto`` selector: per step, its plan must equal the cheaper of the
+  hand-picked pull/naive plans (ties to pull) across the whole stdlib;
+* the (executor × schedule) matrix in-process: partitioned(S=1) naive and
+  auto bit-match the fused dense executor with identical plan-derived
+  superstep counts — closing the ROADMAP "pull schedule only" asymmetry;
+* the CHAIN_MODE deprecation shim (module global → ``schedule=`` arg).
+
+One 8-fake-device subprocess case (a single representative program, see
+the ``subprocess_mesh`` marker) keeps the multi-shard naive collectives
+honest without re-paying the full subprocess matrix.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import ast as past
+from repro.core import codegen, compile_program, lower_step
+from repro.core.analysis import iter_steps
+from repro.core.plan import (
+    MainCompute,
+    ReadRound,
+    RemoteUpdate,
+    SCHEDULES,
+    StepPlan,
+)
+from repro.graph import generators as G
+from repro.pregel import run_bsp
+
+
+def _steps(src, g, fields=None):
+    cp = compile_program(src, g, initial_fields=fields)
+    return [s for s in iter_steps(cp.prog) if isinstance(s, past.Step)]
+
+
+def _setup(name, seed=3):
+    fields = None
+    if name == "sssp":
+        g = G.erdos_renyi(40, 4.0, directed=True, weighted=True, seed=seed)
+    elif name == "chain4":
+        g = G.erdos_renyi(30, 2.0, directed=False, seed=seed)
+        rng = np.random.default_rng(seed)
+        fields = {"D": jnp.asarray(rng.integers(0, 30, 30), jnp.int32)}
+    else:
+        g = G.erdos_renyi(40, 3.0, directed=False, weighted=True, seed=seed)
+    return g, fields
+
+
+class TestPlanStructure:
+    def test_chain4_pull_is_pointer_doubling(self):
+        g, fields = _setup("chain4")
+        (step,) = _steps(alg.CHAIN4, g, fields)
+        plan = lower_step(step, schedule="pull")
+        kinds = [type(op).__name__ for op in plan.ops]
+        assert kinds == ["ReadRound", "ReadRound", "MainCompute"]
+        # round 1 materializes D², round 2 composes D⁴ = D²∘D²
+        assert plan.ops[0].chains[0].pattern == ("D", "D")
+        assert plan.ops[1].chains[0].pattern == ("D",) * 4
+        assert plan.ops[1].chains[0].prefix == ("D", "D")
+        assert plan.ops[1].chains[0].suffix == ("D", "D")
+        assert plan.read_rounds == 2 and plan.n_supersteps == 3
+
+    def test_chain4_naive_is_request_reply_per_hop(self):
+        g, fields = _setup("chain4")
+        (step,) = _steps(alg.CHAIN4, g, fields)
+        plan = lower_step(step, schedule="naive")
+        rr = [op for op in plan.ops if isinstance(op, ReadRound)]
+        # three hops (D², D³, D⁴), each a request+reply pair
+        assert [op.kind for op in rr] == ["request", "reply"] * 3
+        # each naive hop splits off the last field
+        for op in rr:
+            (ce,) = op.chains
+            assert ce.prefix == ce.pattern[:-1] and ce.suffix == (ce.pattern[-1],)
+        assert plan.n_supersteps == 7  # 6 read rounds + main (paper: naive)
+
+    def test_remote_update_carries_write_descs(self):
+        g, _ = _setup("sv")
+        steps = _steps(alg.SV, g)
+        body = steps[-1]  # the iteration body step (has the remote write)
+        plan = lower_step(body, schedule="pull")
+        (ru,) = [op for op in plan.ops if isinstance(op, RemoteUpdate)]
+        assert ru.writes == (("D", "<?="),)
+        assert plan.ops[-2] == MainCompute(emits_remote=True)
+
+    def test_general_read_costs_read_rounds(self):
+        """A computed-index ("general") read is one request/reply
+        conversation in manual code and one gather round under pull; the
+        plan charges those supersteps (chain-less rounds — the value is
+        consumed inline in main), keeping the old STM charges AND making
+        every executor actually dispatch what the model counts."""
+        src = """
+for v in V
+    local A[v] := Id[v] % numV
+    local B[v] := Id[v] * 2
+end
+for v in V
+    local X[v] := B[(A[v] + 1) % numV]
+end
+"""
+        g = G.erdos_renyi(24, 2.0, directed=False, seed=0)
+        cp = compile_program(src, g)
+        step = _steps(src, g)[-1]
+        pull = lower_step(step, schedule="pull")
+        naive = lower_step(step, schedule="naive")
+        assert pull.read_rounds == 1 and not pull.ops[0].chains
+        assert [op.kind for op in naive.ops[:-1]] == ["request", "reply"]
+        # old STM charges hold and match execution on every executor
+        dense, _, counts = cp.run()
+        assert counts["pull_staged"] == 1 + 2  # init main + RR + main
+        assert counts["naive"] == 1 + 3
+        f0 = cp.init_fields()
+        for sched in ("pull", "naive", "auto"):
+            for placement, kw in (
+                ("replicated", {}), ("partitioned", {"n_shards": 1}),
+            ):
+                res = run_bsp(
+                    cp.prog, g, f0, schedule=sched, placement=placement, **kw
+                )
+                key = "pull_staged" if sched in ("pull", "auto") else "naive"
+                assert res.supersteps == counts[key], (sched, placement)
+                assert np.array_equal(
+                    np.asarray(dense["X"]), np.asarray(res.fields["X"])
+                )
+
+    def test_unknown_schedule_rejected(self):
+        g, _ = _setup("wcc")
+        (s0, *_) = _steps(alg.WCC, g)
+        with pytest.raises(ValueError):
+            lower_step(s0, schedule="bogus")
+
+    def test_one_op_is_one_superstep_across_stdlib(self):
+        """`len(plan.ops)` must equal read_rounds + main + remote-update —
+        the invariant the STM cost models and all executors count on."""
+        for name, src in alg.ALL.items():
+            g, fields = _setup(name if name in ("sssp", "chain4") else "wcc")
+            if name == "mis":
+                fields = {"P": jnp.zeros((g.n_vertices,), jnp.float32)}
+            elif name == "bipartite_matching":
+                fields = {"Side": jnp.zeros((g.n_vertices,), jnp.int32)}
+            elif name == "kcore":
+                fields = {"K": jnp.full((g.n_vertices,), 2, jnp.int32)}
+            elif name == "chain4":
+                fields = {"D": jnp.zeros((g.n_vertices,), jnp.int32)}
+            for step in _steps(alg.ALL[name], g, fields):
+                for sched in SCHEDULES:
+                    plan = lower_step(step, schedule=sched)
+                    assert plan.n_supersteps == (
+                        plan.read_rounds
+                        + 1
+                        + (1 if plan.has_remote_update else 0)
+                    ), (name, sched)
+
+
+class TestAutoSelector:
+    def test_auto_matches_cheaper_hand_picked_plan(self):
+        """The selector's plan must be exactly the cheaper of the two
+        hand-picked lowerings (by the plan's own op count; ties → pull)."""
+        for name, src in alg.ALL.items():
+            g = G.erdos_renyi(30, 3.0, directed=False, weighted=True, seed=1)
+            fields = {
+                "D": jnp.zeros((30,), jnp.int32),
+                "P": jnp.zeros((30,), jnp.float32),
+                "Side": jnp.zeros((30,), jnp.int32),
+                "K": jnp.full((30,), 2, jnp.int32),
+            }
+            for step in _steps(src, g, fields):
+                pull = lower_step(step, schedule="pull")
+                naive = lower_step(step, schedule="naive")
+                auto = lower_step(step, schedule="auto")
+                best = (
+                    pull
+                    if pull.n_supersteps <= naive.n_supersteps
+                    else naive
+                )
+                assert auto.ops == best.ops, (name, auto.describe())
+                assert auto.schedule == best.schedule
+                assert auto.requested == "auto"
+
+    def test_auto_cost_model_lower_bounds(self):
+        """STM: auto ≤ min(pull_staged, naive) on any trip vector."""
+        from repro.core.parser import parse
+        from repro.core.stm import superstep_report
+
+        for name, src in alg.ALL.items():
+            rep = superstep_report(parse(src))
+            trips = {i: 3 for i in range(4)}
+            assert rep["auto"].count(trips) <= rep["pull_staged"].count(trips)
+            assert rep["auto"].count(trips) <= rep["naive"].count(trips)
+
+
+MATRIX_ALGS = ["sssp", "wcc", "sv", "chain4"]
+
+
+class TestExecutorScheduleMatrix:
+    """Every (executor × schedule) cell bit-matches the fused dense
+    executor, with identical plan-derived superstep counts. S=1 exercises
+    the whole partitioned machinery in-process (the 8-device subprocess
+    case below keeps one multi-shard representative)."""
+
+    @pytest.mark.parametrize("name", MATRIX_ALGS)
+    @pytest.mark.parametrize("schedule", ["naive", "auto"])
+    def test_partitioned_matches_dense(self, name, schedule):
+        g, fields = _setup(name)
+        cp = compile_program(alg.ALL[name], g, initial_fields=fields)
+        dense, _, counts = cp.run(fields)
+        f0 = cp.init_fields(fields)
+        res = run_bsp(
+            cp.prog, g, f0, schedule=schedule,
+            placement="partitioned", n_shards=1,
+        )
+        for f in dense:
+            assert np.array_equal(
+                np.asarray(dense[f]), np.asarray(res.fields[f]),
+                equal_nan=True,
+            ), (name, schedule, f)
+        assert res.supersteps == counts[schedule]
+
+    @pytest.mark.parametrize("name", MATRIX_ALGS)
+    def test_staged_and_partitioned_counts_agree(self, name):
+        """Both executors charge the same plan, so their executed superstep
+        totals agree cell-for-cell across schedules."""
+        g, fields = _setup(name)
+        cp = compile_program(alg.ALL[name], g, initial_fields=fields)
+        f0 = cp.init_fields(fields)
+        for schedule in ("pull", "naive", "auto"):
+            staged = run_bsp(cp.prog, g, f0, schedule=schedule)
+            part = run_bsp(
+                cp.prog, g, f0, schedule=schedule,
+                placement="partitioned", n_shards=1,
+            )
+            assert staged.supersteps == part.supersteps, (name, schedule)
+
+    def test_fused_dense_naive_schedule_matches_pull(self):
+        """compile_program(schedule="naive") folds the request/reply plan
+        into the fused trace; results are bit-identical to pull (the wire
+        term is exactly zero)."""
+        for name in MATRIX_ALGS:
+            g, fields = _setup(name)
+            ref, _, _ = compile_program(
+                alg.ALL[name], g, initial_fields=fields
+            ).run(fields)
+            out, _, _ = compile_program(
+                alg.ALL[name], g, initial_fields=fields, schedule="naive"
+            ).run(fields)
+            for f in ref:
+                assert np.array_equal(
+                    np.asarray(ref[f]), np.asarray(out[f]), equal_nan=True
+                ), (name, f)
+
+
+class TestChainModeShim:
+    def test_chain_mode_global_still_honored_with_warning(self):
+        g, fields = _setup("chain4")
+        ref = compile_program(
+            alg.CHAIN4, g, initial_fields=fields, schedule="naive"
+        )
+        ref_out, _, _ = ref.run(fields)
+        old = codegen.CHAIN_MODE
+        try:
+            codegen.CHAIN_MODE = "naive"
+            cp = compile_program(alg.CHAIN4, g, initial_fields=fields)
+            with pytest.warns(DeprecationWarning):
+                out, _, _ = cp.run(fields)
+        finally:
+            codegen.CHAIN_MODE = old
+        assert np.array_equal(np.asarray(out["D4"]), np.asarray(ref_out["D4"]))
+
+    def test_explicit_schedule_bypasses_global(self):
+        g, fields = _setup("chain4")
+        old = codegen.CHAIN_MODE
+        try:
+            codegen.CHAIN_MODE = "naive"
+            import warnings
+
+            with warnings.catch_warnings():
+                warnings.simplefilter("error", DeprecationWarning)
+                cp = compile_program(
+                    alg.CHAIN4, g, initial_fields=fields, schedule="pull"
+                )
+                cp.run(fields)
+        finally:
+            codegen.CHAIN_MODE = old
+
+
+SUBPROCESS_TEST = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import algorithms as alg, compile_program
+    from repro.graph import generators as G
+    from repro.pregel import run_bsp
+
+    # one representative program: S-V has chain access (pointer doubling vs
+    # per-hop gather_global), neighborhood reads, and remote writes — every
+    # collective the naive partitioned path adds
+    g = G.erdos_renyi(48, 3.0, directed=False, weighted=True, seed=3)
+    cp = compile_program(alg.SV, g)
+    dense, _, counts = cp.run()
+    f0 = cp.init_fields()
+    for sched, key in (("naive", "naive"), ("auto", "auto")):
+        res = run_bsp(cp.prog, g, f0, schedule=sched, placement="partitioned")
+        for f in dense:
+            a, b = np.asarray(dense[f]), np.asarray(res.fields[f])
+            assert np.array_equal(a, b, equal_nan=True), (sched, f)
+        assert res.supersteps == counts[key], (
+            sched, res.supersteps, counts[key])
+        print(sched, "ok", res.supersteps)
+    print("PLAN_SUBPROCESS_OK")
+    """
+)
+
+
+@pytest.mark.subprocess_mesh
+def test_partitioned_naive_multidevice_single_program():
+    """S-V under schedule="naive"/"auto" on the 8-fake-device mesh:
+    bit-identical fields and plan-derived superstep counts vs dense."""
+    res = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_TEST],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        timeout=900,
+        cwd=str(Path(__file__).resolve().parent.parent),
+    )
+    assert "PLAN_SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
