@@ -29,12 +29,13 @@ argument for the halo-exchange subsystem in one artifact.
 """
 
 import argparse
+import dataclasses
 import json
+import sys
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import compile_program
@@ -80,8 +81,6 @@ def run_cell(algo: str, mode: str, n: int, e: int, mesh):
         init_fields = {"D": jnp.zeros((64,), jnp.int32)}
     cp = compile_program(src, small, initial_fields=init_fields, schedule=mode)
     body = one_iteration_prog(cp.prog)
-    import dataclasses
-
     cp_body = dataclasses.replace(
         compile_program(src, small, initial_fields=init_fields, schedule=mode),
         prog=body, n_iters=0,
@@ -165,29 +164,63 @@ def comm_comparison(n_shards: int = 8) -> dict:
     }
 
 
+#: schedule → STM cost-model key (the count every executor charges)
+SCHED_KEYS = {
+    "pull": "pull_staged",
+    "push": "push",
+    "naive": "naive",
+    "auto": "auto",
+}
+
+
 def schedule_report(
-    algos=("sssp", "wcc", "sv", "chain4", "pagerank"), n_shards: int = 8
+    algos=("sssp", "wcc", "sv", "chain4", "pagerank"),
+    n_shards: int = 8,
+    grid_shape=(512, 8),
 ) -> dict:
-    """Per-schedule superstep counts and bytes-per-superstep, derived from
-    the plan IR (``repro.core.plan``) — the (executor × schedule) cost
-    surface in one artifact.
+    """Per-schedule superstep counts and modeled bytes, derived from the
+    plan IR (``repro.core.plan``) — the (executor × schedule) cost surface
+    in one artifact.
 
-    For each algorithm and each schedule (pull / naive / auto) we lower
-    every step to its StepPlan, execute once on a small graph to get real
-    trip counts, and report: the per-step op lists, total executed
-    supersteps (the STM cost model evaluated on the measured trips — equal
-    to what both the staged and the partitioned executor actually charge),
-    and the partitioned layout's padded bytes × supersteps per iteration
-    on the grid graph (what one fixed-point round costs on the wire).
+    For each algorithm and each schedule (pull / push / naive / auto) we
+    lower every step to its StepPlan, execute once on a small graph to get
+    real trip counts, and report: the per-step op lists with their
+    byte-model estimates, total executed supersteps (the STM cost model
+    evaluated on the measured trips — equal to what every executor
+    actually charges), and the partitioned layout's padded bytes ×
+    supersteps per iteration on the grid graph.
+
+    ``auto_byte_regimes`` shows where the byte-aware selector flips: under
+    the *dense* regime (every vertex reads its chain — pull's best case)
+    and the *sparse* regime (request set = the grid halo, combined further
+    by message dedup — deep chains with tiny frontiers), per step. The
+    regime cost models always derive from the canonical 512×8 grid (its
+    host-side partition costs milliseconds), so the selections the
+    ``bench-plan-regression`` gate diffs are identical between ``--quick``
+    runs and the committed full-size report; ``grid_shape`` only scales
+    the padded-byte figures, which the gate deliberately ignores.
     """
+    from repro.core.plan import program_plan_records
     from repro.graph import generators as G
-    from repro.graph.partition import comm_bytes_report
+    from repro.graph.partition import byte_cost_model, comm_bytes_report
 
-    grid = G.grid2d(512, 8)
-    grid_bytes = comm_bytes_report(grid, n_shards)[
-        "partitioned_padded_bytes_per_superstep"
-    ]
+    grid = G.grid2d(*grid_shape)
+    grid_rep = comm_bytes_report(grid, n_shards)
+    grid_bytes = grid_rep["partitioned_padded_bytes_per_superstep"]
     small = G.erdos_renyi(64, 4.0, directed=False, weighted=True, seed=0)
+    # the two byte regimes the selector is judged under — pinned to the
+    # canonical grid so they are graph-size-invariant across --quick
+    regime_grid = G.grid2d(512, 8)
+    halo_total = comm_bytes_report(regime_grid, n_shards)["partition"][
+        "halo_total"
+    ]
+    dense_costs = byte_cost_model(regime_grid, n_shards)
+    sparse_costs = byte_cost_model(
+        regime_grid,
+        n_shards,
+        request_set=max(1, halo_total),
+        combined_request_set=max(1, halo_total // 4),
+    )
     out = {}
     for algo in algos:
         init_fields = None
@@ -195,28 +228,93 @@ def schedule_report(
             init_fields = {"D": jnp.zeros((64,), jnp.int32)}
         cp = compile_program(alg.ALL[algo], small, initial_fields=init_fields)
         _, trips, counts = cp.run(init_fields)
-        from repro.core.plan import program_plan_records
 
         cell = {}
-        for sched in ("pull", "naive", "auto"):
-            key = {"pull": "pull_staged", "naive": "naive", "auto": "auto"}[sched]
+        for sched, key in SCHED_KEYS.items():
             total = counts[key]
             cell[sched] = {
-                "steps": program_plan_records(cp.step_plans(sched)),
+                "steps": program_plan_records(
+                    cp.step_plans(sched), costs=dense_costs
+                ),
                 "executed_supersteps": total,
                 "grid_padded_bytes_total": total * grid_bytes,
             }
+        cell["auto_byte_regimes"] = {
+            regime: [
+                r["resolved"]
+                for r in program_plan_records(
+                    dataclasses.replace(cp, byte_costs=costs).step_plans(
+                        "auto"
+                    ),
+                    costs=costs,
+                )
+            ]
+            for regime, costs in (
+                ("dense", dense_costs), ("sparse", sparse_costs),
+            )
+        }
         out[algo] = cell
     return {
         "n_shards": n_shards,
         "grid_padded_bytes_per_superstep": grid_bytes,
+        "sparse_regime": {
+            "request_set": max(1, halo_total),
+            "combined_request_set": max(1, halo_total // 4),
+        },
         "per_algo": out,
         "note": (
             "superstep counts are plan-derived (len(StepPlan.ops) per step, "
-            "STM cost model on measured trips); bytes are the grid graph's "
-            "partitioned padded per-superstep cost times executed supersteps"
+            "STM cost model on measured trips); per-step 'bytes' is the "
+            "plan byte model under the dense regime; bytes totals are the "
+            "grid graph's partitioned padded per-superstep cost times "
+            "executed supersteps"
         ),
     }
+
+
+def check_plan_regression(bench: dict, committed_path: Path) -> list:
+    """Diff plan-derived superstep counts per (program × schedule) against
+    the committed benchmark JSON. Returns a list of drift descriptions
+    (empty = clean). Byte figures are deliberately NOT compared — they
+    scale with the grid, which ``--quick`` shrinks; the plan-derived
+    counts and resolved schedules must be graph-size-invariant.
+    """
+    committed = json.loads(committed_path.read_text())
+    drifts = []
+    old_algos = committed.get("schedules", {}).get("per_algo", {})
+    new_algos = bench["schedules"]["per_algo"]
+    for algo in sorted(set(old_algos) | set(new_algos)):
+        if algo not in old_algos or algo not in new_algos:
+            drifts.append(f"{algo}: present in only one report")
+            continue
+        for sched in SCHED_KEYS:
+            old, new = old_algos[algo].get(sched), new_algos[algo].get(sched)
+            if old is None or new is None:
+                drifts.append(f"{algo}/{sched}: present in only one report")
+                continue
+            for fld in ("executed_supersteps",):
+                if old[fld] != new[fld]:
+                    drifts.append(
+                        f"{algo}/{sched}: {fld} {old[fld]} -> {new[fld]}"
+                    )
+            old_steps = [
+                (s["resolved"], s["supersteps"]) for s in old["steps"]
+            ]
+            new_steps = [
+                (s["resolved"], s["supersteps"]) for s in new["steps"]
+            ]
+            if old_steps != new_steps:
+                drifts.append(
+                    f"{algo}/{sched}: per-step plans {old_steps} -> {new_steps}"
+                )
+        for regime in ("dense", "sparse"):
+            old = old_algos[algo].get("auto_byte_regimes", {}).get(regime)
+            new = new_algos[algo].get("auto_byte_regimes", {}).get(regime)
+            if old != new:
+                drifts.append(
+                    f"{algo}/auto[{regime}]: resolved {old} -> {new}"
+                )
+    return drifts
 
 
 def main():
@@ -227,16 +325,44 @@ def main():
     ap.add_argument("--comm-only", action="store_true",
                     help="only write BENCH_palgol_mesh.json (no 512-dev "
                          "roofline lowering)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: tiny grid, comm+schedule report only — "
+                         "plan-derived counts are identical to the full run")
+    ap.add_argument("--out", default=None,
+                    help="where to write the benchmark JSON (default: "
+                         "repo-root BENCH_palgol_mesh.json)")
+    ap.add_argument("--check", default=None, metavar="COMMITTED_JSON",
+                    help="diff plan-derived superstep counts per (program "
+                         "× schedule) against a committed report; exit 2 "
+                         "on drift (the bench-plan-regression CI gate)")
     ap.add_argument("--shards", type=int, default=8)
     args = ap.parse_args()
 
+    grid_shape = (64, 8) if args.quick else (512, 8)
     bench = comm_comparison(args.shards)
-    bench["schedules"] = schedule_report(n_shards=args.shards)
+    bench["schedules"] = schedule_report(
+        n_shards=args.shards, grid_shape=grid_shape
+    )
     repo_root = Path(__file__).resolve().parent.parent
-    (repo_root / "BENCH_palgol_mesh.json").write_text(json.dumps(bench, indent=1))
+    out_path = (
+        Path(args.out) if args.out else repo_root / "BENCH_palgol_mesh.json"
+    )
+    out_path.write_text(json.dumps(bench, indent=1))
     for algo, cell in bench["schedules"]["per_algo"].items():
-        per = {s: cell[s]["executed_supersteps"] for s in cell}
-        print(f"{algo}: supersteps {per}", flush=True)
+        per = {
+            s: cell[s]["executed_supersteps"] for s in SCHED_KEYS if s in cell
+        }
+        print(f"{algo}: supersteps {per} "
+              f"auto_bytes={cell['auto_byte_regimes']}", flush=True)
+    if args.check:
+        drifts = check_plan_regression(bench, Path(args.check))
+        if drifts:
+            print("PLAN REGRESSION: plan-derived counts drifted from "
+                  f"{args.check}:", flush=True)
+            for d in drifts:
+                print(f"  {d}", flush=True)
+            sys.exit(2)
+        print(f"plan-regression check vs {args.check}: clean", flush=True)
     for gname, rec in bench["per_graph"].items():
         red = rec["reduction_vs_replicated"]
         nph = rec["vertices_per_halo_entry"]
@@ -247,7 +373,7 @@ def main():
             f"N/halo={'inf' if nph is None else f'{nph:.1f}'}",
             flush=True,
         )
-    if args.comm_only:
+    if args.comm_only or args.quick:
         return
 
     n = 1 << args.scale

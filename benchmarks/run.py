@@ -11,7 +11,6 @@ Prints ``name,us_per_call,derived`` CSV:
 """
 
 import argparse
-import sys
 
 
 def main() -> None:

@@ -60,7 +60,7 @@ def main():
           f" (executed)  {t_naive * 1e3:9.1f} ms")
     red = 100 * (1 - counts["palgol_push"] / counts["naive"])
     print(f"\nsuperstep reduction vs naive: {red:.1f}% "
-          f"(paper reports 46.5–51.7% for S-V)")
+          "(paper reports 46.5–51.7% for S-V)")
 
 
 if __name__ == "__main__":

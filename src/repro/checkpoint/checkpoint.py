@@ -163,9 +163,7 @@ def restore_checkpoint(
         else:
             arr = jax.numpy.asarray(arr)
         out_leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(
-        treedef, [l for l in out_leaves]
-    )
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
     return tree, step, manifest.get("extra", {})
 
 

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict
 
 # ---------------------------------------------------------------------------
 # shape tables (verbatim from the assignment)

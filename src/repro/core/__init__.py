@@ -10,6 +10,14 @@ Public API:
 from repro.core.parser import parse
 from repro.core.compiler import compile_program
 from repro.core.interpreter import interpret
-from repro.core.plan import StepPlan, lower_step
+from repro.core.plan import ByteCostModel, StepPlan, lower_step, plan_bytes
 
-__all__ = ["parse", "compile_program", "interpret", "StepPlan", "lower_step"]
+__all__ = [
+    "parse",
+    "compile_program",
+    "interpret",
+    "ByteCostModel",
+    "StepPlan",
+    "lower_step",
+    "plan_bytes",
+]

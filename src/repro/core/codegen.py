@@ -23,14 +23,13 @@ collectives inserted by GSPMD when fields are sharded.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ast
-from repro.core.analysis import CompileError, analyze_step, chain_pattern_of, neighbor_pattern_of
+from repro.core.analysis import CompileError, chain_pattern_of
 from repro.core.logic import PullSolver
 from repro.core.plan import (
     MainCompute,
@@ -42,27 +41,9 @@ from repro.graph import ops as gops
 
 HALTED = "_halted"
 
-# DEPRECATED (kept one release as a shim): the mutable module-global that
-# used to select the chain-access schedule. The schedule is now an explicit
-# ``schedule=`` argument on StepExecutor / compile_program / run_bsp (the
-# plan IR in repro.core.plan made the global redundant). If a caller still
-# pokes this global and does not pass ``schedule=``, the poked value is
-# honored with a DeprecationWarning.
-CHAIN_MODE = "pull"
-
-
-def resolve_schedule(schedule: Optional[str]) -> str:
-    """Explicit ``schedule=`` argument, else the deprecated CHAIN_MODE shim."""
-    if schedule is not None:
-        return schedule
-    if CHAIN_MODE != "pull":
-        warnings.warn(
-            "repro.core.codegen.CHAIN_MODE is deprecated; pass "
-            "schedule=... to compile_program / StepExecutor instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-    return CHAIN_MODE
+# NOTE: the deprecated ``codegen.CHAIN_MODE`` module global (PR 3's
+# one-release shim) is gone; the schedule is the explicit ``schedule=``
+# argument on compile_program / StepExecutor / run_bsp.
 
 _OP_APPLY = {
     ":=": lambda cur, val: val,
@@ -145,7 +126,7 @@ class StepExecutor:
         self.n = graph.n_vertices
         self.nrows = comm.n_rows if comm is not None else graph.n_vertices
         if plan is None:
-            plan = lower_step(step, schedule=resolve_schedule(schedule))
+            plan = lower_step(step, schedule=schedule or "pull")
         self.plan = plan
         self.info = plan.info
         self.pull = PullSolver()
@@ -280,7 +261,17 @@ class StepExecutor:
                     self._ids(), mode="drop"
                 )[: self.n]
             return
-        for ce in op.chains:  # kind "pull" or "reply": gather suffix@prefix
+        if op.kind == "push_request":
+            # push address-propagation round: requester ids are forwarded
+            # (combined per owner) along the chain. The fused dense trace
+            # has no wire, so this op only accounts for its superstep;
+            # under a partitioned comm the push_reply round's
+            # gather_global pays the combined exchange for real.
+            return
+        # kind "pull", "reply" or "push_reply": gather suffix@prefix
+        # (push_reply is the combined reply — one value per distinct
+        # owner, fanned out to its requesters: exactly the gather)
+        for ce in op.chains:
             if ce.pattern in self.chain_cache:
                 continue
             pre = self._chain_value(ce.prefix)
@@ -355,9 +346,9 @@ class StepExecutor:
             f = self._eval(e.other, ectx)
             return jnp.where(c, t, f)
         if isinstance(e, ast.BinOp):
-            l = self._eval(e.left, ectx)
-            r = self._eval(e.right, ectx)
-            return _binop(e.op, l, r)
+            lhs = self._eval(e.left, ectx)
+            rhs = self._eval(e.right, ectx)
+            return _binop(e.op, lhs, rhs)
         if isinstance(e, ast.UnOp):
             x = self._eval(e.operand, ectx)
             return jnp.logical_not(x) if e.op == "!" else -x
@@ -544,35 +535,35 @@ def _fold_combiner(op: str, cur: jax.Array, delta: jax.Array) -> jax.Array:
     return gops.combine(op, cur, delta).astype(cur.dtype)
 
 
-def _binop(op: str, l, r):
+def _binop(op: str, lhs, rhs):
     if op == "+":
-        return l + r
+        return lhs + rhs
     if op == "-":
-        return l - r
+        return lhs - rhs
     if op == "*":
-        return l * r
+        return lhs * rhs
     if op == "/":
         # float division unless both ints and exact context; Palgol `/` is
         # numeric division (PageRank), use true division then keep dtype rules
-        return jnp.asarray(l) / r
+        return jnp.asarray(lhs) / rhs
     if op == "%":
-        return jnp.asarray(l) % r
+        return jnp.asarray(lhs) % rhs
     if op == "==":
-        return jnp.equal(l, r)
+        return jnp.equal(lhs, rhs)
     if op == "!=":
-        return jnp.not_equal(l, r)
+        return jnp.not_equal(lhs, rhs)
     if op == "<":
-        return jnp.less(l, r)
+        return jnp.less(lhs, rhs)
     if op == "<=":
-        return jnp.less_equal(l, r)
+        return jnp.less_equal(lhs, rhs)
     if op == ">":
-        return jnp.greater(l, r)
+        return jnp.greater(lhs, rhs)
     if op == ">=":
-        return jnp.greater_equal(l, r)
+        return jnp.greater_equal(lhs, rhs)
     if op == "&&":
-        return jnp.logical_and(l, r)
+        return jnp.logical_and(lhs, rhs)
     if op == "||":
-        return jnp.logical_or(l, r)
+        return jnp.logical_or(lhs, rhs)
     raise CompileError(f"unknown operator {op!r}")
 
 

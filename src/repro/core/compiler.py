@@ -21,8 +21,8 @@ from repro.core import ast
 from repro.core import parser as palgol_parser
 from repro.core import stm as stm_mod
 from repro.core.analysis import CompileError, iter_steps
-from repro.core.codegen import HALTED, StepExecutor, make_stop_fn, resolve_schedule
-from repro.core.plan import SCHEDULES, StepPlan, lower_step
+from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
+from repro.core.plan import ByteCostModel, SCHEDULES, StepPlan, lower_step
 
 
 def _iter_nodes(prog: ast.Prog) -> List[ast.Iter]:
@@ -49,21 +49,23 @@ class CompiledProgram:
     n_iters: int
     max_iters: int
     cost_models: Dict[str, stm_mod.CostModel]
-    # chain-access schedule the fused trace lowers under ("pull" | "naive" |
-    # "auto"); None defers to the deprecated codegen.CHAIN_MODE shim at
-    # trace time (which defaults to "pull")
+    # chain-access schedule the fused trace lowers under ("pull" | "push" |
+    # "naive" | "auto"); None means "pull"
     schedule: Optional[str] = None
+    # per-round byte estimates feeding the byte-aware ``auto`` selector
+    # (None: auto selects on op count alone)
+    byte_costs: Optional[ByteCostModel] = None
 
     def step_plans(
         self, schedule: Optional[str] = None
     ) -> List[tuple]:
         """``(step, StepPlan)`` for every Step node, in program order —
         what ``fn`` folds into the trace (dry-run / benchmark surface)."""
-        sched = resolve_schedule(
+        sched = (
             schedule if schedule is not None else self.schedule
-        )
+        ) or "pull"
         return [
-            (s, lower_step(s, schedule=sched))
+            (s, lower_step(s, schedule=sched, byte_costs=self.byte_costs))
             for s in iter_steps(self.prog)
             if isinstance(s, ast.Step)
         ]
@@ -95,12 +97,14 @@ class CompiledProgram:
         graph = graph if graph is not None else self.graph
         iter_ids = {id(node): i for i, node in enumerate(_iter_nodes(self.prog))}
         trips0 = jnp.zeros((max(self.n_iters, 1),), jnp.int32)
-        sched = resolve_schedule(self.schedule)
+        sched = self.schedule or "pull"
         plans: Dict[int, StepPlan] = {}
 
         def plan_for(step: ast.Step) -> StepPlan:
             if id(step) not in plans:
-                plans[id(step)] = lower_step(step, schedule=sched)
+                plans[id(step)] = lower_step(
+                    step, schedule=sched, byte_costs=self.byte_costs
+                )
             return plans[id(step)]
 
         def run(p: ast.Prog, flds, trips):
@@ -214,6 +218,7 @@ def compile_program(
     initial_fields: Optional[Dict[str, jax.Array]] = None,
     max_iters: int = 100_000,
     schedule: Optional[str] = None,
+    byte_costs: Optional[ByteCostModel] = None,
 ) -> CompiledProgram:
     """Compile Palgol source (or AST) against a graph.
 
@@ -222,10 +227,15 @@ def compile_program(
     abstract-evaluation pass and zero-initialized.
 
     ``schedule`` selects the chain-access lowering the fused trace folds
-    in (``"pull"`` — pointer-doubling gather DAG, ``"naive"`` — per-hop
-    request/reply wire-cost model, ``"auto"`` — per-step cheapest by plan
-    op count). ``None`` defers to the deprecated ``codegen.CHAIN_MODE``
-    shim, i.e. effectively ``"pull"``.
+    in (``"pull"`` — pointer-doubling gather DAG, ``"push"`` — the
+    paper-faithful request/combined-reply message schedule, ``"naive"`` —
+    per-hop request/reply wire-cost model, ``"auto"`` — per-step cheapest).
+    ``None`` means ``"pull"``. ``byte_costs`` (a
+    :class:`repro.core.plan.ByteCostModel`, e.g. from
+    :func:`repro.graph.partition.byte_cost_model`) makes ``"auto"`` select
+    on (supersteps, modeled wire bytes) instead of op count; the STM
+    ``auto`` cost model is built with the same costs so the accounting
+    tracks the selection.
     """
     prog = (
         palgol_parser.parse(source_or_ast)
@@ -244,7 +254,7 @@ def compile_program(
         arr = jnp.asarray(arr)
         fs[name] = jax.ShapeDtypeStruct(arr.shape, arr.dtype)
     field_struct = _discover_fields(prog, graph, fs)
-    cost_models = stm_mod.superstep_report(prog)
+    cost_models = stm_mod.superstep_report(prog, byte_costs=byte_costs)
     return CompiledProgram(
         prog=prog,
         graph=graph,
@@ -253,4 +263,5 @@ def compile_program(
         max_iters=max_iters,
         cost_models=cost_models,
         schedule=schedule,
+        byte_costs=byte_costs,
     )

@@ -111,9 +111,9 @@ def interpret(
                 else eval_expr(e.other, u, env, old)
             )
         if isinstance(e, ast.BinOp):
-            l = eval_expr(e.left, u, env, old)
-            r = eval_expr(e.right, u, env, old)
-            return _apply_binop(e.op, l, r)
+            lhs = eval_expr(e.left, u, env, old)
+            rhs = eval_expr(e.right, u, env, old)
+            return _apply_binop(e.op, lhs, rhs)
         if isinstance(e, ast.UnOp):
             x = eval_expr(e.operand, u, env, old)
             return (not x) if e.op == "!" else -x
@@ -287,36 +287,36 @@ def _wrap_i32(v):
     return int((int(v) + 2**31) % 2**32 - 2**31)
 
 
-def _apply_binop(op, l, r):
-    wrap = _is_int(l) and _is_int(r)
+def _apply_binop(op, lhs, rhs):
+    wrap = _is_int(lhs) and _is_int(rhs)
     if op == "+":
-        return _wrap_i32(l + r) if wrap else l + r
+        return _wrap_i32(lhs + rhs) if wrap else lhs + rhs
     if op == "-":
-        return _wrap_i32(l - r) if wrap else l - r
+        return _wrap_i32(lhs - rhs) if wrap else lhs - rhs
     if op == "*":
-        return _wrap_i32(l * r) if wrap else l * r
+        return _wrap_i32(lhs * rhs) if wrap else lhs * rhs
     if op == "/":
-        if r == 0:
-            return math.inf if l > 0 else (-math.inf if l < 0 else math.nan)
-        return l / r
+        if rhs == 0:
+            return math.inf if lhs > 0 else (-math.inf if lhs < 0 else math.nan)
+        return lhs / rhs
     if op == "%":
-        return l % r
+        return lhs % rhs
     if op == "==":
-        return l == r
+        return lhs == rhs
     if op == "!=":
-        return l != r
+        return lhs != rhs
     if op == "<":
-        return l < r
+        return lhs < rhs
     if op == "<=":
-        return l <= r
+        return lhs <= rhs
     if op == ">":
-        return l > r
+        return lhs > rhs
     if op == ">=":
-        return l >= r
+        return lhs >= rhs
     if op == "&&":
-        return bool(l) and bool(r)
+        return bool(lhs) and bool(rhs)
     if op == "||":
-        return bool(l) or bool(r)
+        return bool(lhs) or bool(rhs)
     raise CompileError(f"unknown operator {op!r}")
 
 

@@ -27,30 +27,48 @@ Schedules
     through the :class:`~repro.core.logic.PullSolver` gather DAG, one
     ``ReadRound`` per DAG depth (pointer doubling — ``D⁴`` in 2 rounds);
     neighborhood sends piggyback on the round after their chain is ready.
+``"push"``
+    The paper-faithful message-passing schedule (§4): chain patterns
+    evaluate through the :class:`~repro.core.logic.PushSolver` derivation
+    — requester addresses are forwarded along the chain while values
+    double back, so ``D⁴`` costs 3 rounds instead of naive's 6. Rounds
+    come in two kinds: ``push_request`` (address propagation only) and
+    ``push_reply`` (a combined-reply round: the owner's value is sent
+    once per combined request — Pregel message combining, the
+    ``combiner`` op on the round — and materializes chain buffers).
+    Neighborhood sends are the classic combined push along edges.
 ``"naive"``
     Hand-written-Pregel request/reply: every chain hop costs a *request*
     round (push requester ids to the owner — a real scatter) and a *reply*
     round (the owner returns the value), sequentially per pattern, plus one
-    neighborhood-send round. The wire traffic manual code pays.
+    neighborhood-send round. The wire traffic manual code pays, with no
+    message combining.
 ``"auto"``
-    Per-step selection: lower under both schedules and keep the plan with
-    fewer ops (ties go to ``pull``). This is the STM-cost-driven choice —
-    the plan's own op count is the superstep cost model — following the
-    channel-composition line of Zhang & Hu (1811.01669) and the push/pull
-    selection knob of iPregel (2010.08781).
+    Per-step selection among the three: lower under every schedule and
+    keep the cheapest plan. Without a :class:`ByteCostModel` the metric is
+    the plan's own op count (the superstep cost model; ties go
+    ``pull`` → ``push`` → ``naive``). With one, the metric is
+    ``supersteps · superstep_overhead_bytes + plan_bytes(plan)`` — the
+    byte-aware selection that lets naive/push win on tiny request sets at
+    deep chains, following the channel-composition line of Zhang & Hu
+    (1811.01669) and the combiner-driven push/pull knob of iPregel
+    (2010.08781).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import ast
 from repro.core.analysis import StepInfo, analyze_step
-from repro.core.logic import Pattern, PullSolver
+from repro.core.logic import Pattern, PullSolver, PushPlan, PushSolver
 
 #: the schedules lower_step accepts
-SCHEDULES = ("pull", "naive", "auto")
+SCHEDULES = ("pull", "push", "naive", "auto")
+
+#: schedules auto chooses among, in tie-break preference order
+_AUTO_ORDER = ("pull", "push", "naive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,12 +78,29 @@ class ChainEval:
     Both operands are already-materialized patterns (or axioms: ``()`` is
     the vertex id, a single field is a local array read). Pull rounds use
     the PullSolver's balanced split; naive hops always split off the last
-    field (``prefix = pattern[:-1]``, ``suffix = (pattern[-1],)``).
+    field (``prefix = pattern[:-1]``, ``suffix = (pattern[-1],)``); push
+    rounds split at the derivation's chosen intermediate (``prefix = via``,
+    ``suffix = pattern/via`` — the value the via-vertex ships back).
     """
 
     pattern: Pattern
     prefix: Pattern
     suffix: Pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class PushSend:
+    """One message flow of the push derivation completing this round:
+    vertex ``via(u)`` sends ``expr(u)`` to vertex ``target(u)``
+    (``expr = ()`` is the requester id — address propagation;
+    ``target = ()`` is the requester itself — a value delivery).
+    Recorded for wire accounting (:func:`plan_bytes`) and ``describe``;
+    value deliveries also appear as the round's executable ``chains``.
+    """
+
+    target: Pattern
+    expr: Pattern
+    via: Pattern
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,12 +117,22 @@ class ReadRound:
     * ``"reply"`` — naive hop, owner→requester value gather (materializes
       ``chains[0].pattern``);
     * ``"nbr_send"`` — the naive schedule's neighborhood-send superstep
-      (``nbr_sends`` only).
+      (``nbr_sends`` only);
+    * ``"push_request"`` — push round carrying only address propagation
+      (``sends``; requester ids forwarded along the chain, combined per
+      owner with ``combiner``);
+    * ``"push_reply"`` — push round delivering values: ``chains`` are the
+      buffers it materializes (one combined reply per distinct owner —
+      message combining with ``combiner``), ``sends`` any piggybacked
+      address flows, ``nbr_sends`` the combined neighborhood pushes.
     """
 
     kind: str
     chains: Tuple[ChainEval, ...] = ()
     nbr_sends: Tuple[Tuple[str, Pattern], ...] = ()  # (direction, pattern)
+    sends: Tuple[PushSend, ...] = ()  # push message flows (accounting)
+    combiner: Optional[str] = None  # message-combining op on push rounds
+    general: int = 0  # general-read conversation legs riding this round
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,12 +151,18 @@ class RemoteUpdate:
 
 PlanOp = object  # ReadRound | MainCompute | RemoteUpdate
 
+#: ReadRound kinds that materialize their ``chains`` as value buffers
+VALUE_KINDS = ("pull", "reply", "push_reply")
+
+#: ReadRound kinds that carry addresses only (no buffer materialized)
+REQUEST_KINDS = ("request", "push_request")
+
 
 @dataclasses.dataclass(frozen=True)
 class StepPlan:
     """A Palgol step lowered to its superstep op list.
 
-    ``schedule`` is the *resolved* schedule (``pull``/``naive``);
+    ``schedule`` is the *resolved* schedule (``pull``/``push``/``naive``);
     ``requested`` records what the caller asked for (may be ``auto``).
     """
 
@@ -141,7 +192,7 @@ class StepPlan:
         the staged executor), in materialization order."""
         out: List[Pattern] = []
         for op in self.ops:
-            if isinstance(op, ReadRound) and op.kind in ("pull", "reply"):
+            if isinstance(op, ReadRound) and op.kind in VALUE_KINDS:
                 out.extend(ce.pattern for ce in op.chains)
         return tuple(dict.fromkeys(out))
 
@@ -151,6 +202,10 @@ class StepPlan:
         for op in self.ops:
             if isinstance(op, ReadRound):
                 items = [".".join(ce.pattern) for ce in op.chains]
+                items += [
+                    f"@{'.'.join(s.target) or 'u'}<-{'.'.join(s.expr) or 'Id'}"
+                    for s in op.sends
+                ]
                 items += [f"{d}:{'.'.join(p) or 'Id'}" for d, p in op.nbr_sends]
                 parts.append(f"RR[{op.kind}{' ' if items else ''}{' '.join(items)}]")
             elif isinstance(op, MainCompute):
@@ -229,29 +284,264 @@ def _lower_naive(step: ast.Step, info: StepInfo) -> List[PlanOp]:
     return _tail(ops, step, info)
 
 
-def program_plan_records(step_plans) -> List[dict]:
+def _collect_push_sends(
+    plan: PushPlan, out: Dict[Tuple[Pattern, Pattern], Tuple[int, Pattern]]
+):
+    """Walk a chosen PushPlan derivation, recording every non-axiom send as
+    (target, expr) → (completion round, via). Shared sub-derivations dedup
+    (the solver memo already shares them across patterns)."""
+    if plan.rounds <= 0 or plan.via is None:
+        return
+    key = (plan.target, plan.expr)
+    if key not in out or out[key][0] > plan.rounds:
+        out[key] = (plan.rounds, plan.via)
+    _collect_push_sends(plan.value_plan, out)
+    _collect_push_sends(plan.addr_plan, out)
+
+
+def _lower_push(step: ast.Step, info: StepInfo) -> List[PlanOp]:
+    """The paper-faithful push expansion (§4.1.1 message passing).
+
+    Chain materializations follow the PushSolver derivation: the value
+    ``K_u p`` completes at round ``rounds(p)`` via intermediate ``w``, and
+    the executable realization is the gather ``eval(p/w)[eval(w)]`` — so
+    the via-prefix ``w`` is (recursively) scheduled for materialization
+    too. For every chain pattern up to depth 8 this reproduces the
+    solver's minimal round count exactly (property-tested); the defensive
+    ``max`` below only extends the plan if a prefix materialization ever
+    lagged its consumer, keeping the lowering correct even then.
+    """
+    solver = PushSolver()
+    mat_round: Dict[Pattern, int] = {}
+    via_of: Dict[Pattern, Pattern] = {}
+
+    def want(p: Pattern) -> int:
+        if len(p) <= 1:
+            return 0
+        if p in mat_round:
+            return mat_round[p]
+        plan = solver.solve((), p)
+        via = plan.via
+        r = plan.rounds
+        for dep in (via, p[len(via):]):
+            r = max(r, want(dep) + 1)
+        mat_round[p] = r
+        via_of[p] = via
+        return r
+
+    for p in info.read_patterns():
+        want(p)
+
+    # message flows of the chosen derivations, for wire accounting
+    send_round: Dict[Tuple[Pattern, Pattern], Tuple[int, Pattern]] = {}
+    for p in info.read_patterns():
+        _collect_push_sends(solver.solve((), p), send_round)
+
+    total = max([0] + list(mat_round.values()))
+    # the neighborhood send is the classic combined Pregel push along
+    # edges: it fires once the sender's chain value is materialized
+    nbr_round = {
+        (d, p): mat_round.get(p, 0) + 1 for d, p in info.nbr_comms
+    }
+    if nbr_round:
+        total = max(total, max(nbr_round.values()))
+    if info.general_reads:
+        # one combined request/reply conversation; independent flows share
+        # supersteps, so it contributes rounds 1–2 (paper's parallel flows)
+        total = max(total, 2)
+
+    ops: List[PlanOp] = []
+    for r in range(1, total + 1):
+        chains = tuple(
+            ChainEval(p, via_of[p], p[len(via_of[p]):])
+            for p in sorted(mat_round)
+            if mat_round[p] == r
+        )
+        sends = tuple(
+            PushSend(t, e, via)
+            for (t, e), (rr, via) in sorted(send_round.items())
+            if rr == r and t != ()  # value deliveries are the chains above
+        )
+        nbrs = tuple(sorted(k for k, rr in nbr_round.items() if rr == r))
+        # general-read conversations ride rounds 1 (request) and 2 (reply)
+        general = info.general_reads if r <= 2 else 0
+        carries_values = bool(chains or nbrs or (r == 2 and general))
+        kind = "push_reply" if carries_values else "push_request"
+        ops.append(
+            ReadRound(kind, chains, nbrs, sends, combiner="min",
+                      general=general)
+        )
+    return _tail(ops, step, info)
+
+
+_LOWERERS = {
+    "pull": _lower_pull,
+    "push": _lower_push,
+    "naive": _lower_naive,
+}
+
+
+# ---------------------------------------------------------------------------
+# per-op byte estimates + the byte-aware auto selector
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteCostModel:
+    """Per-round byte estimates for plan selection and reporting.
+
+    All figures are aggregate across devices, for one value-width field.
+
+    * ``n_vertices`` — full array width: what a pull round's one-sided
+      gather ships (pointer doubling materializes intermediates at *every*
+      vertex, so its request set cannot shrink);
+    * ``request_set`` — live requesters per naive hop (≤ N; measured from
+      the active set / halted mask, or the partition halo as a boundary
+      proxy). Naive pays one request + one reply message per requester;
+    * ``combined_request_set`` — requesters after message combining (push:
+      one slot per distinct owner). Defaults to ``request_set`` (no
+      combining advantage assumed until measured);
+    * ``halo_bytes`` — one static neighborhood exchange
+      (:func:`repro.graph.partition.stats.partition_stats` halo payload);
+    * ``update_bytes`` — one RemoteUpdate reduce-scatter;
+    * ``reply_width`` — values per reply payload (multi-field chains);
+    * ``superstep_overhead_bytes`` — byte-equivalent of one superstep's
+      fixed latency (barrier + dispatch); what ``auto`` charges per op on
+      top of the wire bytes.
+    """
+
+    n_vertices: int
+    value_bytes: int = 4
+    request_set: Optional[int] = None
+    combined_request_set: Optional[int] = None
+    halo_bytes: Optional[int] = None
+    update_bytes: Optional[int] = None
+    reply_width: int = 1
+    superstep_overhead_bytes: int = 0
+
+    def resolved(self) -> "ByteCostModel":
+        """Fill defaults: request_set→N, combined→request_set,
+        halo/update→N values (replicated-dense worst case). Request sets
+        clamp to N — each vertex issues at most one chain request per hop,
+        so a measured proxy larger than N (e.g. a power-law halo) caps."""
+        n = self.n_vertices
+        b = self.value_bytes
+        req = self.request_set if self.request_set is not None else n
+        req = min(req, n)
+        comb = (
+            self.combined_request_set
+            if self.combined_request_set is not None
+            else req
+        )
+        comb = min(comb, req)
+        halo = self.halo_bytes if self.halo_bytes is not None else n * b
+        upd = self.update_bytes if self.update_bytes is not None else n * b
+        return dataclasses.replace(
+            self,
+            request_set=req,
+            combined_request_set=comb,
+            halo_bytes=halo,
+            update_bytes=upd,
+        )
+
+
+def op_bytes(op: PlanOp, costs: ByteCostModel) -> int:
+    """Estimated wire bytes of one plan op under ``costs`` (resolved).
+
+    * pull round: each chain is an array-wide one-sided gather — N ids out,
+      N·reply_width values back; neighborhood sends ride the static halo;
+    * naive request/reply: one message per live requester, uncombined;
+    * push request/reply: one message per *combined* request slot
+      (message combining), address flows (``sends``) ship combined ids;
+    * MainCompute is wire-free; RemoteUpdate is one combined scatter.
+    """
+    b = costs.value_bytes
+    if isinstance(op, MainCompute):
+        return 0
+    if isinstance(op, RemoteUpdate):
+        return costs.update_bytes
+    total = 0
+    if op.kind == "pull":
+        for _ in op.chains:
+            total += costs.n_vertices * b * (1 + costs.reply_width)
+    elif op.kind == "request":
+        total += max(1, len(op.chains)) * costs.request_set * b
+    elif op.kind == "reply":
+        total += (
+            max(1, len(op.chains))
+            * costs.request_set
+            * costs.reply_width
+            * b
+        )
+    elif op.kind == "push_request":
+        total += (
+            max(1, len(op.sends) + op.general)
+            * costs.combined_request_set
+            * b
+        )
+    elif op.kind == "push_reply":
+        total += (
+            len(op.chains) * costs.combined_request_set * costs.reply_width * b
+        )
+        total += len(op.sends) * costs.combined_request_set * b
+        # general-read conversation legs riding this round (combined)
+        total += op.general * costs.combined_request_set * costs.reply_width * b
+    for _ in op.nbr_sends:
+        total += costs.halo_bytes
+    return total
+
+
+def plan_bytes(plan: StepPlan, costs: ByteCostModel) -> int:
+    """Total estimated wire bytes of one execution of ``plan``."""
+    costs = costs.resolved()
+    return sum(op_bytes(op, costs) for op in plan.ops)
+
+
+def plan_score(plan: StepPlan, costs: Optional[ByteCostModel]) -> Tuple:
+    """The auto-selection metric. Without costs: op count (the plan's own
+    superstep cost model). With costs: supersteps charged at the fixed
+    per-superstep overhead plus the modeled wire bytes."""
+    if costs is None:
+        return (plan.n_supersteps,)
+    costs = costs.resolved()
+    return (
+        plan.n_supersteps * costs.superstep_overhead_bytes
+        + plan_bytes(plan, costs),
+        plan.n_supersteps,
+    )
+
+
+def program_plan_records(step_plans, costs: Optional[ByteCostModel] = None):
     """JSON-ready records for ``CompiledProgram.step_plans()`` output — the
-    one rendering the benchmark report and the partition dry-run share."""
-    return [
-        {
+    one rendering the benchmark report and the partition dry-run share.
+    With a :class:`ByteCostModel`, each record also carries the modeled
+    per-execution wire bytes."""
+    out = []
+    for _, plan in step_plans:
+        rec = {
             "resolved": plan.schedule,
             "read_rounds": plan.read_rounds,
             "supersteps": plan.n_supersteps,
             "ops": plan.describe(),
         }
-        for _, plan in step_plans
-    ]
+        if costs is not None:
+            rec["bytes"] = plan_bytes(plan, costs)
+        out.append(rec)
+    return out
 
 
 def lower_step(
     step: ast.Step,
     info: Optional[StepInfo] = None,
     schedule: str = "pull",
+    byte_costs: Optional[ByteCostModel] = None,
 ) -> StepPlan:
     """Lower a Palgol step to its :class:`StepPlan` under ``schedule``.
 
     The one canonical superstep expansion — every executor and the STM
-    cost models consume this.
+    cost models consume this. ``byte_costs`` only affects ``"auto"``:
+    the selector then ranks candidate plans by
+    :func:`plan_score` (supersteps·overhead + modeled bytes) instead of
+    bare op count.
     """
     if schedule not in SCHEDULES:
         raise ValueError(
@@ -259,11 +549,11 @@ def lower_step(
         )
     info = info if info is not None else analyze_step(step)
     if schedule == "auto":
-        pull = StepPlan(step, info, "pull", "auto", tuple(_lower_pull(step, info)))
-        naive = StepPlan(
-            step, info, "naive", "auto", tuple(_lower_naive(step, info))
-        )
-        # the plan's own op count IS the superstep cost model; ties → pull
-        return pull if pull.n_supersteps <= naive.n_supersteps else naive
-    ops = _lower_pull(step, info) if schedule == "pull" else _lower_naive(step, info)
+        candidates = [
+            StepPlan(step, info, s, "auto", tuple(_LOWERERS[s](step, info)))
+            for s in _AUTO_ORDER
+        ]
+        # stable min: ties keep the earlier (pull-first) candidate
+        return min(candidates, key=lambda p: plan_score(p, byte_costs))
+    ops = _LOWERERS[schedule](step, info)
     return StepPlan(step, info, schedule, schedule, tuple(ops))

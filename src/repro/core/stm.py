@@ -5,7 +5,9 @@ the compiled program costs, under either communication model:
 
 * ``mode="push"`` — paper-faithful: chain access via the PushSolver's
   message-passing plans (request/reply style, minimal rounds), neighborhood
-  communication via a send superstep.
+  communication via a combined send superstep. Since the push schedule
+  became executable (``repro.core.plan._lower_push``), this counts the
+  very plan ops the executors dispatch — same as every other mode.
 * ``mode="pull"`` — this framework's dense execution: one-sided gather
   rounds (pointer doubling), strictly ≤ push rounds.
 
@@ -30,10 +32,9 @@ the measured trip counts from execution.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import ast
-from repro.core.analysis import analyze_step
 from repro.core import plan as plan_mod
 
 
@@ -81,22 +82,17 @@ class CostModel:
         return total
 
 
-def _step_states(step: ast.Step, mode: str) -> List[State]:
-    if mode == "push":
-        # paper-faithful message-passing plans — an accounting-only regime
-        # (no executor runs it), still derived from the PushSolver
-        info = analyze_step(step)
-        read_rounds = info.push_read_rounds()
-        states = [State("read", f"rr{i}") for i in range(read_rounds)]
-        states.append(State("main", "main"))
-        if info.has_remote_writes():
-            states.append(State("update", "ru"))
-        return states
+def _step_states(
+    step: ast.Step,
+    mode: str,
+    byte_costs: Optional[plan_mod.ByteCostModel] = None,
+) -> List[State]:
     if mode not in plan_mod.SCHEDULES:
         raise ValueError(f"unknown mode {mode!r}")
-    # executable schedules: one State per plan op — the cost model counts
-    # the very op list the executors dispatch, so they cannot diverge
-    plan = plan_mod.lower_step(step, schedule=mode)
+    # every schedule is executable: one State per plan op — the cost model
+    # counts the very op list the executors dispatch, so they cannot
+    # diverge (push included since repro.core.plan._lower_push landed)
+    plan = plan_mod.lower_step(step, schedule=mode, byte_costs=byte_costs)
     states: List[State] = []
     ri = 0
     for op in plan.ops:
@@ -111,18 +107,23 @@ def _step_states(step: ast.Step, mode: str) -> List[State]:
 
 
 def build_stm(
-    prog: ast.Prog, mode: str = "push", optimize: bool = True
+    prog: ast.Prog,
+    mode: str = "push",
+    optimize: bool = True,
+    byte_costs: Optional[plan_mod.ByteCostModel] = None,
 ) -> Tuple[STM, CostModel]:
     """Build the STM and its superstep cost model.
 
     ``optimize=False`` gives the naive compilation (no merging/fusion,
-    request-reply chains) used as the manual-style baseline.
+    request-reply chains) used as the manual-style baseline. ``byte_costs``
+    only affects ``mode="auto"`` (byte-aware per-step selection, matching
+    executors given the same costs).
     """
     iter_counter = [0]
 
     def build(p: ast.Prog) -> List:
         if isinstance(p, ast.Step):
-            return list(_step_states(p, mode))
+            return list(_step_states(p, mode, byte_costs))
         if isinstance(p, ast.StopStep):
             return [State("main", "stop")]
         if isinstance(p, ast.Seq):
@@ -203,7 +204,10 @@ def build_stm(
     return stm, CostModel(base, per_iter, detail)
 
 
-def superstep_report(prog: ast.Prog) -> Dict[str, CostModel]:
+def superstep_report(
+    prog: ast.Prog,
+    byte_costs: Optional[plan_mod.ByteCostModel] = None,
+) -> Dict[str, CostModel]:
     """Cost models under the compilation regimes.
 
     * ``palgol_push``  — paper-faithful compiler output (logic-system chain
@@ -211,16 +215,22 @@ def superstep_report(prog: ast.Prog) -> Dict[str, CostModel]:
     * ``palgol_pull``  — this framework's dense schedule (gather staging);
     * ``pull_staged``  — pull schedule without merging/fusion (matches the
       staged BSP executor's actually-executed count);
+    * ``push``         — push schedule without merging/fusion (matches
+      ``schedule="push"`` execution on every executor);
     * ``naive``        — request/reply chains, no merging/fusion (the
       "straightforward"/manual baseline the paper compares against);
-    * ``auto``         — per-step cheapest of pull/naive by plan op count,
-      unfused (matches ``schedule="auto"`` execution on both the staged
-      and the partitioned executor).
+    * ``auto``         — per-step cheapest of pull/push/naive, unfused
+      (matches ``schedule="auto"`` execution on both the staged and the
+      partitioned executor; pass the same ``byte_costs`` the executor got
+      for the byte-aware selection to line up).
     """
     return {
         "palgol_push": build_stm(prog, "push", optimize=True)[1],
         "palgol_pull": build_stm(prog, "pull", optimize=True)[1],
         "pull_staged": build_stm(prog, "pull", optimize=False)[1],
+        "push": build_stm(prog, "push", optimize=False)[1],
         "naive": build_stm(prog, "naive", optimize=False)[1],
-        "auto": build_stm(prog, "auto", optimize=False)[1],
+        "auto": build_stm(
+            prog, "auto", optimize=False, byte_costs=byte_costs
+        )[1],
     }

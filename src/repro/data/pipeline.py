@@ -9,7 +9,7 @@ the input-pipeline half of compute/IO overlap).
 
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

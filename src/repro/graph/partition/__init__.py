@@ -18,7 +18,10 @@ shard — and each superstep moves only *boundary* state:
   ``placement="partitioned"`` path of ``repro.pregel.run_bsp``, executing
   unchanged Palgol programs over the partitioned layout;
 * :mod:`~repro.graph.partition.stats` — communication accounting feeding
-  ``benchmarks/palgol_mesh.py``.
+  ``benchmarks/palgol_mesh.py``, and ``byte_cost_model`` — the measured
+  halo/request-set figures instrumented into a
+  :class:`repro.core.plan.ByteCostModel` for the byte-aware ``auto``
+  schedule selector.
 """
 
 from repro.graph.partition.partitioner import (  # noqa: F401
@@ -35,6 +38,7 @@ from repro.graph.partition.executor import (  # noqa: F401
     run_bsp_partitioned,
 )
 from repro.graph.partition.stats import (  # noqa: F401
+    byte_cost_model,
     comm_bytes_report,
     partition_stats,
 )

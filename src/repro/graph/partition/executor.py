@@ -13,21 +13,27 @@ runs with a :class:`ShardComm`, folding the step's
   :func:`~.halo.halo_exchange` (moves only boundary state);
 * ``ReadRound`` for chain accesses (``D[D[u]]``) →
   :func:`~.halo.gather_global` — once per pull round (pointer doubling
-  rebuilds its request halo from the current indirection field), or once
+  rebuilds its request halo from the current indirection field), once
   per hop under ``schedule="naive"`` (the gather_global exchange *is* the
-  request/reply pair, so the hop's two supersteps are charged honestly);
+  request/reply pair, so the hop's two supersteps are charged honestly),
+  and once per ``push_reply`` round under ``schedule="push"`` (the
+  request bucketing inside gather_global *is* the combined request set —
+  one slot per owner shard — so the paired ``push_request`` superstep's
+  exchange is paid here; combined replies map onto the reply
+  ``all_to_all``);
 * ``RemoteUpdate`` → :func:`~.halo.scatter_reduce` + a local fold at the
-  owner.
+  owner (the same combiner-aware reduce-scatter push-mode remote writes
+  ride).
 
 Superstep accounting is ``plan.n_supersteps`` — the identical plan the
 staged dense executor dispatches — so STM cross-checks carry over by
-construction, for every schedule (``pull``/``naive``/``auto``).
+construction, for every schedule (``pull``/``push``/``naive``/``auto``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import ast
 from repro.core.codegen import HALTED, StepExecutor, _EdgeCtx, make_stop_fn
-from repro.core.plan import StepPlan, lower_step
+from repro.core.plan import ByteCostModel, StepPlan, lower_step
 from repro.graph import ops as gops
 from repro.graph.partition import halo
 from repro.graph.partition.partitioner import (
@@ -222,6 +228,7 @@ def run_bsp_partitioned(
     max_iters: int = 100_000,
     mesh=None,
     n_shards: int = None,
+    byte_costs: Optional[ByteCostModel] = None,
 ) -> BSPResult:
     """Execute a Palgol program over partitioned vertex state.
 
@@ -230,8 +237,12 @@ def run_bsp_partitioned(
     is partitioned over ``mesh`` (default: a 1-D mesh over all local
     devices, built by :func:`repro.dist.sharding.shard_mesh`). Every
     schedule runs here: ``"pull"`` (pointer-doubled gather_global rounds),
+    ``"push"`` (the paper's request/combined-reply rounds — gather_global's
+    owner-bucketed request exchange is the combined request set),
     ``"naive"`` (one gather_global per chain hop — the honest request/reply
-    wire cost), ``"auto"`` (cheapest per step by plan op count).
+    wire cost), ``"auto"`` (cheapest per step by plan op count, or by the
+    byte model when ``byte_costs`` is given — build one from this layout
+    with :func:`repro.graph.partition.byte_cost_model`).
     """
     from repro.dist import sharding as shd
 
@@ -255,7 +266,7 @@ def run_bsp_partitioned(
 
     def exec_step(step: ast.Step, flds):
         if id(step) not in cache:
-            plan = lower_step(step, schedule=schedule)
+            plan = lower_step(step, schedule=schedule, byte_costs=byte_costs)
             cache[id(step)] = (
                 _make_step_fn(step, plan, pg, mesh, keys),
                 plan.n_supersteps,

@@ -24,6 +24,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.plan import ByteCostModel
 from repro.graph.partition.partitioner import (
     PartitionedGraph,
     partition_graph,
@@ -94,3 +95,45 @@ def comm_bytes_report(
             else n / stats["halo_total"]
         ),
     }
+
+
+def byte_cost_model(
+    graph,
+    n_shards: int,
+    bytes_per_value: int = 4,
+    pg: Optional[PartitionedGraph] = None,
+    request_set: Optional[int] = None,
+    combined_request_set: Optional[int] = None,
+    superstep_overhead_bytes: int = 0,
+) -> ByteCostModel:
+    """Instrument a :class:`~repro.core.plan.ByteCostModel` from the
+    partitioned layout — the plug between this layer's measured structure
+    and the plan IR's byte-aware ``auto`` selector.
+
+    * ``halo_bytes`` — the static halo payload one neighborhood round
+      actually moves (``partition_stats``'s per-(owner, reader) counts);
+    * ``update_bytes`` — one remote-write reduce-scatter, charged at the
+      same halo payload (remote writes in the stdlib target neighbors or
+      chain endpoints, both boundary-shaped);
+    * ``request_set`` — live requesters per dynamic chain round. Defaults
+      to ``n_vertices`` (every vertex reads its chain — the dense dryrun
+      regime); pass a measured active-set size (e.g. the frontier of a
+      converging pointer-jumping round, or ``halo_total`` for a
+      boundary-only access pattern) to model the sparse regimes where
+      naive/push beat pull;
+    * ``combined_request_set`` — requesters after message combining
+      (push); defaults to ``request_set``.
+    """
+    if pg is None:
+        pg = partition_graph(graph, n_shards)
+    stats = partition_stats(pg)
+    halo_bytes = stats["halo_total"] * bytes_per_value
+    return ByteCostModel(
+        n_vertices=pg.n_vertices,
+        value_bytes=bytes_per_value,
+        request_set=request_set,
+        combined_request_set=combined_request_set,
+        halo_bytes=halo_bytes,
+        update_bytes=halo_bytes,
+        superstep_overhead_bytes=superstep_overhead_bytes,
+    )

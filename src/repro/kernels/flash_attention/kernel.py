@@ -95,8 +95,8 @@ def _attn_kernel(
 
     @pl.when(j == n_k - 1)
     def _finalize():
-        l = l_ref[:, 0]
-        norm = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+        lsum = l_ref[:, 0]
+        norm = jnp.where(lsum > 0.0, 1.0 / jnp.maximum(lsum, 1e-30), 0.0)
         o_ref[0] = (acc_ref[...] * norm[:, None]).astype(o_ref.dtype)
 
 

@@ -9,7 +9,6 @@ read — the pull-mode schedule of core/logic.py at the kernel level).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 

@@ -498,11 +498,16 @@ def dryrun_cell(arch_id: str, shape_id: str, mesh_kind: str,
     return rec
 
 
-def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4")) -> dict:
+def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4"), costs=None) -> dict:
     """Per-step superstep plans (repro.core.plan) for the representative
     programs, under every schedule — what the partitioned executor will
     dispatch, printed so a pod-scale dry-run shows the op-by-op shape of
-    each superstep before any device exists."""
+    each superstep before any device exists. ``costs`` (a ByteCostModel
+    instrumented from the pod-scale partition) annotates every plan with
+    its modeled wire bytes and adds the byte-aware ``auto`` pick under a
+    sparse-request-set regime."""
+    import dataclasses as _dc
+
     import jax.numpy as jnp
 
     from repro.core import algorithms as alg, compile_program
@@ -516,10 +521,16 @@ def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4")) -> dict:
         if name == "chain4":
             init_fields = {"D": jnp.zeros((64,), jnp.int32)}
         cp = compile_program(alg.ALL[name], small, initial_fields=init_fields)
-        out[name] = {
-            sched: program_plan_records(cp.step_plans(sched))
+        cell = {
+            sched: program_plan_records(cp.step_plans(sched), costs=costs)
             for sched in SCHEDULES
         }
+        if costs is not None:
+            cell["auto_bytes"] = program_plan_records(
+                _dc.replace(cp, byte_costs=costs).step_plans("auto"),
+                costs=costs,
+            )
+        out[name] = cell
     return out
 
 
@@ -534,7 +545,7 @@ def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
     Writes ``experiments/dryrun/palgol_partition.json``.
     """
     from repro.graph import generators as G
-    from repro.graph.partition import comm_bytes_report
+    from repro.graph.partition import byte_cost_model, comm_bytes_report
 
     g = G.rmat(scale, avg_degree=16.0, directed=True, seed=0)
     rec = comm_bytes_report(g, n_shards)
@@ -545,13 +556,28 @@ def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
         max(stats["pull_edges_per_shard"])
         / max(1.0, stats["n_edges"] / n_shards)
     )
-    rec["step_plans"] = _palgol_step_plans()
+    # byte model instrumented from this pod-scale layout, in the sparse
+    # regime (request set = the measured halo — the boundary-active case
+    # where the byte-aware auto abandons pull at deep chains)
+    costs = byte_cost_model(
+        g, n_shards,
+        request_set=max(1, stats["halo_total"]),
+        combined_request_set=max(1, stats["halo_total"] // 4),
+    )
+    rec["byte_cost_model"] = {
+        "n_vertices": costs.n_vertices,
+        "halo_bytes": costs.halo_bytes,
+        "request_set": costs.request_set,
+        "combined_request_set": costs.combined_request_set,
+    }
+    rec["step_plans"] = _palgol_step_plans(costs=costs)
     for name, cell in rec["step_plans"].items():
         for sched, steps in cell.items():
             for i, s in enumerate(steps):
                 print(
                     f"plan {name} step{i} [{sched}->{s['resolved']}] "
-                    f"({s['supersteps']} ss): {s['ops']}",
+                    f"({s['supersteps']} ss, ~{s.get('bytes', 0)/1e3:.1f}KB): "
+                    f"{s['ops']}",
                     flush=True,
                 )
     path = OUT_DIR / "palgol_partition.json"

@@ -13,7 +13,6 @@ optional int8-compressed DP gradients. On this CPU container use
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import functools
 import time
 
@@ -44,26 +43,44 @@ def build(arch: str, reduced: bool, batch: int, seq: int, seed: int):
     key = jax.random.PRNGKey(seed)
     if spec.family == "lm":
         params = tm.init(key, cfg)
-        loss_fn = lambda p, b: tm.loss_fn(p, b, cfg)
+
+        def loss_fn(p, b):
+            return tm.loss_fn(p, b, cfg)
+
         data = token_batches(batch, seq, cfg.vocab_size, seed=seed)
         batches = [next(data) for _ in range(16)]
-        batch_for_step = lambda i: batches[i % len(batches)]
+
+        def batch_for_step(i):
+            return batches[i % len(batches)]
+
     elif spec.family == "gnn":
         cfg_r = cfg
         params = gm.init(key, cfg_r)
-        loss_fn = lambda p, b: gm.loss_fn(p, b, cfg_r)
+
+        def loss_fn(p, b):
+            return gm.loss_fn(p, b, cfg_r)
+
         fb = gnn_full_batch(
             max(batch * 16, 64), 6.0, cfg_r.d_in, cfg_r.n_out, seed=seed,
             task=cfg_r.task, n_out=cfg_r.n_out,
         )
-        batch_for_step = lambda i: fb
+
+        def batch_for_step(i):
+            return fb
+
     else:
         params = autoint.init(key, cfg)
-        loss_fn = lambda p, b: autoint.loss_fn(p, b, cfg)
+
+        def loss_fn(p, b):
+            return autoint.loss_fn(p, b, cfg)
+
         data = recsys_batches(batch, cfg.n_fields, cfg.vocab_per_field,
                               seed=seed)
         batches = [next(data) for _ in range(16)]
-        batch_for_step = lambda i: batches[i % len(batches)]
+
+        def batch_for_step(i):
+            return batches[i % len(batches)]
+
     return spec, cfg, params, loss_fn, batch_for_step
 
 

@@ -8,7 +8,7 @@ multi-pod dry-run never allocates memory.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -125,7 +125,9 @@ def abstract_like(init_fn, *args, **kwargs):
 
 def count_params(tree) -> int:
     leaves = jax.tree_util.tree_leaves(tree)
-    return sum(int(np.prod(l.shape)) if l.shape else 1 for l in leaves)
+    return sum(
+        int(np.prod(leaf.shape)) if leaf.shape else 1 for leaf in leaves
+    )
 
 
 import numpy as np  # noqa: E402  (used by count_params only)

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,8 +8,6 @@ codegen and (on TPU) the Pallas ``segment_reduce`` kernel.
 
 from __future__ import annotations
 
-import math
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

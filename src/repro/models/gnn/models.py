@@ -12,7 +12,6 @@ Sampled minibatch (``minibatch_lg``) uses padded sampler blocks:
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict
 
 import jax

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from repro.models import common
 from repro.models.common import dense_init
 from repro.models.recsys.config import AutoIntConfig
-from repro.models.recsys.embedding import embedding_bag
 
 
 def init(key, cfg: AutoIntConfig):

@@ -146,7 +146,7 @@ def _flash_fwd_impl(q, k, v, q_pos, k_pos, kv_mask, causal, window, ck):
     scale = dh**-0.5
 
     def kv_step(carry, kv):
-        acc, m, l = carry
+        acc, m, lsum = carry
         ki, vi, kpi, kmi = kv
         ki = repeat_kv(ki, n_rep)
         vi = repeat_kv(vi, n_rep)
@@ -156,7 +156,7 @@ def _flash_fwd_impl(q, k, v, q_pos, k_pos, kv_mask, causal, window, ck):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lsum * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkhd->bhqd", p.astype(q.dtype), vi
         ).astype(jnp.float32)
@@ -165,13 +165,13 @@ def _flash_fwd_impl(q, k, v, q_pos, k_pos, kv_mask, causal, window, ck):
     acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
     m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(
+    (acc, m, lsum), _ = jax.lax.scan(
         kv_step,
         (acc0, m0, l0),
         (_chunked(k, ck), _chunked(v, ck), _chunked(k_pos, ck),
          _chunked(kv_mask, ck)),
     )
-    l_safe = jnp.maximum(l, 1e-30)
+    l_safe = jnp.maximum(lsum, 1e-30)
     out = (acc / l_safe[..., None]).astype(q.dtype)
     out = jnp.transpose(out, (0, 2, 1, 3))  # [b, sq, h, dh]
     lse = m + jnp.log(l_safe)  # [b, h, sq]

@@ -8,7 +8,7 @@ Layers are stacked along a leading axis and executed with ``lax.scan``
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

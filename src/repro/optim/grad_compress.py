@@ -17,7 +17,6 @@ Two entry points:
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -7,11 +7,17 @@ Execution model (mirrors paper Fig. 9): each Palgol step is lowered by
 
 * ``schedule="pull"`` plans chain reads by the PullSolver gather DAG
   (this framework's optimized one-sided schedule);
+* ``schedule="push"`` runs the paper-faithful message schedule: address
+  flows forward along the chain while values double back; each
+  ``push_request`` op combines requester ids per owner (Pregel message
+  combining — a segment-combine scatter), each ``push_reply`` op ships one
+  combined reply per distinct owner and materializes its chain buffers;
 * ``schedule="naive"`` emulates the hand-written request/reply style: every
   chain hop costs a *request* superstep (push requester ids to the owner —
   a real scatter, matching the message traffic of manual Pregel code) and a
   *reply* superstep (the owner sends the value back — a gather);
-* ``schedule="auto"`` picks the cheaper plan per step (by op count);
+* ``schedule="auto"`` picks the cheapest plan per step (by op count, or by
+  the byte model when ``byte_costs`` is given);
 * fixed-point termination is checked on host between supersteps, exactly like
   Pregel's aggregator round-trip.
 
@@ -29,7 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import ast
 from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
-from repro.core.plan import ReadRound, RemoteUpdate, lower_step
+from repro.core.plan import ByteCostModel, ReadRound, RemoteUpdate, lower_step
 from repro.graph import ops as gops
 
 
@@ -44,12 +50,19 @@ class _StagedStep:
     """One Palgol step: its :class:`StepPlan` compiled to a list of
     superstep callables — one jitted device dispatch per plan op."""
 
-    def __init__(self, step: ast.Step, graph, schedule: str):
+    def __init__(
+        self,
+        step: ast.Step,
+        graph,
+        schedule: str,
+        byte_costs: Optional[ByteCostModel] = None,
+    ):
         self.step = step
         self.graph = graph
-        self.plan = lower_step(step, schedule=schedule)
+        self.plan = lower_step(step, schedule=schedule, byte_costs=byte_costs)
         self.info = self.plan.info
-        self.schedule = self.plan.schedule  # resolved (auto → pull/naive)
+        # resolved (auto → pull/push/naive)
+        self.schedule = self.plan.schedule
 
     # -- read supersteps -----------------------------------------------------
     def read_stage_fns(self):
@@ -61,6 +74,18 @@ class _StagedStep:
             if isinstance(op, ReadRound)
         ]
 
+    def _combine_requests(self, owner, combine: str):
+        """Requester-id scatter by owner — the request-superstep wire
+        traffic. ``combine="set"`` is the naive per-requester buffer
+        (colliding requesters overwrite: no combining, as manual code);
+        ``combine="min"`` is Pregel message combining (one deterministic
+        slot per distinct owner). ``n_vertices`` is the empty sentinel."""
+        ids = jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
+        reqbuf = jnp.full_like(ids, self.graph.n_vertices)
+        if combine == "set":
+            return reqbuf.at[owner].set(ids, mode="drop")
+        return reqbuf.at[owner].min(ids, mode="drop")
+
     def _stage_fn(self, op: ReadRound):
         if op.kind == "request":
 
@@ -70,24 +95,62 @@ class _StagedStep:
                 out = dict(mailbox)
                 for ce in _op.chains:
                     owner = self._lookup(fields, out, ce.prefix)
-                    ids = jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
-                    reqbuf = jnp.full_like(ids, self.graph.n_vertices)
-                    out[_key(ce.pattern) + ":req"] = reqbuf.at[owner].set(
-                        ids, mode="drop"
+                    out[_key(ce.pattern) + ":req"] = self._combine_requests(
+                        owner, "set"
                     )
                 return out
 
             return jax.jit(request)
 
+        if op.kind == "push_request":
+
+            def push_request(fields, mailbox, _op=op):
+                # address-propagation round: requester ids move one hop
+                # along the chain, message-combined per owner (one slot
+                # per distinct owner — the scatter-min IS the combiner)
+                out = dict(mailbox)
+                for send in _op.sends:
+                    owner = self._resolve(fields, out, send.target)
+                    if owner is None:
+                        continue
+                    out[_pkey(send.target) + ":req"] = self._combine_requests(
+                        owner, _op.combiner or "min"
+                    )
+                return out
+
+            return jax.jit(push_request)
+
         def stage(fields, mailbox, _op=op):
             # "pull": one gather-DAG round; "reply": the owner returns its
-            # value to the requester; "nbr_send": per-edge buffers
+            # value to the requester; "push_reply": one combined reply per
+            # distinct owner, fanned out to its requesters (the gather),
+            # with the request set segment-combined per owner;
+            # "nbr_send": per-edge buffers
             out = dict(mailbox)
             for ce in _op.chains:
                 pre = self._lookup(fields, out, ce.prefix)
                 suf = self._lookup(fields, out, ce.suffix)
-                out[_key(ce.pattern)] = gops.gather(suf, pre)
+                val = gops.gather(suf, pre)
+                if _op.kind == "push_reply":
+                    # combine concurrent requests per owner (Pregel message
+                    # combining; the combiner op is plan-recorded) and fold
+                    # the combined buffer into the reply — the term is
+                    # exactly zero, but the simplifier can't prove it, so
+                    # the combining scatter survives into the lowering
+                    reqbuf = self._combine_requests(
+                        pre, _op.combiner or "min"
+                    )
+                    val = val + (
+                        gops.gather(reqbuf, pre) // (self.graph.n_vertices + 2)
+                    ).astype(val.dtype)
+                out[_key(ce.pattern)] = val
                 out.pop(_key(ce.pattern) + ":req", None)
+            if _op.kind == "push_reply":
+                # the paired push_request's address buffers were the wire
+                # accounting of *their* superstep; done — drop them so
+                # later dispatches stop threading dead device buffers
+                for k in [k for k in out if k.startswith("pushaddr:")]:
+                    out.pop(k)
             for direction, npat in _op.nbr_sends:
                 nbr, _, _, _ = self.graph.edges(direction)
                 val = self._lookup(fields, out, npat)
@@ -95,6 +158,13 @@ class _StagedStep:
             return out
 
         return jax.jit(stage)
+
+    def _resolve(self, fields, mailbox, pattern):
+        """Pattern value if materialized/axiomatic, else None (push address
+        flows may target chains materialized later the same round)."""
+        if len(pattern) <= 1 or _key(pattern) in mailbox:
+            return self._lookup(fields, mailbox, pattern)
+        return None
 
     def _lookup(self, fields, mailbox, pattern):
         if len(pattern) == 0:
@@ -157,6 +227,10 @@ def read_superstep_count(step: ast.Step, schedule: str) -> int:
 
 def _key(pattern) -> str:
     return "chain:" + "/".join(pattern)
+
+
+def _pkey(pattern) -> str:
+    return "pushaddr:" + "/".join(pattern)
 
 
 def _nkey(direction, pattern) -> str:
@@ -225,6 +299,7 @@ def run_bsp(
     placement: str = "replicated",
     mesh=None,
     n_shards: Optional[int] = None,
+    byte_costs: Optional[ByteCostModel] = None,
 ) -> BSPResult:
     """Execute a Palgol program superstep-by-superstep.
 
@@ -232,8 +307,9 @@ def run_bsp(
     ``CompiledProgram.init_fields``). Returns final fields, the number of
     actually executed supersteps, and per-iteration trip counts.
 
-    ``schedule`` ∈ {"pull", "naive", "auto"} selects the chain-access
-    lowering (see :mod:`repro.core.plan`) and applies to both placements.
+    ``schedule`` ∈ {"pull", "push", "naive", "auto"} selects the
+    chain-access lowering (see :mod:`repro.core.plan`) and applies to both
+    placements; ``byte_costs`` makes ``"auto"`` select on the byte model.
 
     ``placement`` selects the vertex-state layout:
 
@@ -251,7 +327,7 @@ def run_bsp(
 
         return run_bsp_partitioned(
             prog, graph, fields, schedule=schedule, max_iters=max_iters,
-            mesh=mesh, n_shards=n_shards,
+            mesh=mesh, n_shards=n_shards, byte_costs=byte_costs,
         )
     if placement != "replicated":
         raise ValueError(f"unknown placement {placement!r}")
@@ -264,7 +340,7 @@ def run_bsp(
 
     def exec_step(step: ast.Step, flds):
         if id(step) not in cache:
-            staged = _StagedStep(step, graph, schedule)
+            staged = _StagedStep(step, graph, schedule, byte_costs=byte_costs)
             cache[id(step)] = (
                 staged,
                 staged.read_stage_fns(),

@@ -18,7 +18,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
-from repro.launch.mesh import make_production_mesh, make_mesh
+from repro.launch.mesh import make_mesh
 
 
 class TestMeshConstruction:
@@ -105,7 +105,9 @@ SUBPROCESS_TEST = textwrap.dedent(
         ))(params)
     shd.deactivate()
     assert float(jnp.max(jnp.abs(y_ep - y_ref))) < 1e-5, "EP mismatch"
-    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+    assert all(
+        bool(jnp.all(jnp.isfinite(leaf))) for leaf in jax.tree.leaves(g)
+    )
 
     # --- shard_map message passing == direct ops ------------------------
     rng = np.random.default_rng(0)

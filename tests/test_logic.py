@@ -1,6 +1,5 @@
 """Chain-access logic system tests (paper §4.1.1)."""
 
-import pytest
 
 from repro.core.logic import (
     PullSolver,

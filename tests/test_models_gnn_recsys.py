@@ -49,9 +49,9 @@ def test_gnn_training_reduces_loss():
 
     @jax.jit
     def step(p, s):
-        l, g = jax.value_and_grad(lambda q: gm.loss_fn(q, batch, cfg))(p)
+        loss, g = jax.value_and_grad(lambda q: gm.loss_fn(q, batch, cfg))(p)
         p, s = adamw_update(g, s, p, oc)
-        return p, s, l
+        return p, s, loss
 
     for _ in range(60):
         params, st, loss = step(params, st)
@@ -161,11 +161,11 @@ class TestAutoInt:
 
         @jax.jit
         def step(p, s):
-            l, g = jax.value_and_grad(
+            loss, g = jax.value_and_grad(
                 lambda q: autoint.loss_fn(q, batch, cfg)
             )(p)
             p, s = adamw_update(g, s, p, oc)
-            return p, s, l
+            return p, s, loss
 
         for _ in range(50):
             params, st, loss = step(params, st)

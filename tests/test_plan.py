@@ -2,18 +2,22 @@
 
 Four layers:
 
-* plan structure: op lists under pull/naive, one op == one superstep
-  (`len(plan.ops)` is the accounting contract), chain4's known shapes;
-* the ``auto`` selector: per step, its plan must equal the cheaper of the
-  hand-picked pull/naive plans (ties to pull) across the whole stdlib;
-* the (executor × schedule) matrix in-process: partitioned(S=1) naive and
-  auto bit-match the fused dense executor with identical plan-derived
-  superstep counts — closing the ROADMAP "pull schedule only" asymmetry;
-* the CHAIN_MODE deprecation shim (module global → ``schedule=`` arg).
+* plan structure: op lists under pull/push/naive, one op == one superstep
+  (`len(plan.ops)` is the accounting contract), chain4's known shapes
+  (pull pointer doubling, the paper's 3-round push derivation, naive's
+  six request/reply rounds);
+* the ``auto`` selector: per step, its plan must equal the cheapest of
+  the hand-picked pull/push/naive plans (ties pull → push → naive), and
+  with a :class:`~repro.core.plan.ByteCostModel` the byte-aware metric
+  must flip it to push/naive on tiny request sets at deep chains;
+* the (executor × schedule) matrix in-process: partitioned(S=1) push,
+  naive and auto bit-match the fused dense executor with identical
+  plan-derived superstep counts — every schedule now executable on every
+  executor.
 
 One 8-fake-device subprocess case (a single representative program, see
-the ``subprocess_mesh`` marker) keeps the multi-shard naive collectives
-honest without re-paying the full subprocess matrix.
+the ``subprocess_mesh`` marker) keeps the multi-shard push/naive
+collectives honest without re-paying the full subprocess matrix.
 """
 
 import subprocess
@@ -27,14 +31,14 @@ import pytest
 
 from repro.core import algorithms as alg
 from repro.core import ast as past
-from repro.core import codegen, compile_program, lower_step
-from repro.core.analysis import iter_steps
+from repro.core import ByteCostModel, compile_program, lower_step
+from repro.core.analysis import analyze_step, iter_steps
 from repro.core.plan import (
     MainCompute,
     ReadRound,
     RemoteUpdate,
     SCHEDULES,
-    StepPlan,
+    plan_score,
 )
 from repro.graph import generators as G
 from repro.pregel import run_bsp
@@ -56,6 +60,20 @@ def _setup(name, seed=3):
     else:
         g = G.erdos_renyi(40, 3.0, directed=False, weighted=True, seed=seed)
     return g, fields
+
+
+def _stdlib_fields(name, g, fields):
+    """Initial fields the stdlib programs need for compilation."""
+    n = g.n_vertices
+    if name == "mis":
+        return {"P": jnp.zeros((n,), jnp.float32)}
+    if name == "bipartite_matching":
+        return {"Side": jnp.zeros((n,), jnp.int32)}
+    if name == "kcore":
+        return {"K": jnp.full((n,), 2, jnp.int32)}
+    if name == "chain4":
+        return {"D": jnp.zeros((n,), jnp.int32)}
+    return fields
 
 
 class TestPlanStructure:
@@ -84,6 +102,43 @@ class TestPlanStructure:
             (ce,) = op.chains
             assert ce.prefix == ce.pattern[:-1] and ce.suffix == (ce.pattern[-1],)
         assert plan.n_supersteps == 7  # 6 read rounds + main (paper: naive)
+
+    def test_chain4_push_is_paper_three_round_derivation(self):
+        """The executable push plan reproduces the paper's §4.1.1 result:
+        D⁴ in 3 message rounds (request forward, D² combined reply +
+        request forward, D⁴ combined reply) — half of naive's six."""
+        g, fields = _setup("chain4")
+        (step,) = _steps(alg.CHAIN4, g, fields)
+        plan = lower_step(step, schedule="push")
+        rr = [op for op in plan.ops if isinstance(op, ReadRound)]
+        assert [op.kind for op in rr] == [
+            "push_request", "push_reply", "push_reply",
+        ]
+        # round 1 carries the address flow only; round 2 materializes D²
+        # (and forwards the request to D²[u]); round 3 composes D⁴ = D²∘D²
+        assert rr[0].chains == () and rr[0].sends
+        assert rr[1].chains[0].pattern == ("D", "D") and rr[1].sends
+        assert rr[2].chains[0].pattern == ("D",) * 4
+        assert rr[2].chains[0].prefix == ("D", "D")
+        assert rr[2].chains[0].suffix == ("D", "D")
+        # every push round carries the message-combining op
+        assert all(op.combiner == "min" for op in rr)
+        # plan rounds == the PushSolver's minimal count the STM charges
+        assert plan.read_rounds == analyze_step(step).push_read_rounds() == 3
+        assert plan.n_supersteps == 4  # paper: 3 rounds + main
+
+    def test_push_rounds_match_solver_across_stdlib(self):
+        """The executable push plan charges exactly the PushSolver-minimal
+        read rounds the paper-faithful STM (`palgol_push`) counts — the
+        re-alignment contract: accounting == dispatch, now for push too."""
+        for name in alg.ALL:
+            g, fields = _setup(name if name in ("sssp", "chain4") else "wcc")
+            fields = _stdlib_fields(name, g, fields)
+            for step in _steps(alg.ALL[name], g, fields):
+                plan = lower_step(step, schedule="push")
+                assert plan.read_rounds == analyze_step(
+                    step
+                ).push_read_rounds(), name
 
     def test_remote_update_carries_write_descs(self):
         g, _ = _setup("sv")
@@ -121,14 +176,17 @@ end
         assert counts["pull_staged"] == 1 + 2  # init main + RR + main
         assert counts["naive"] == 1 + 3
         f0 = cp.init_fields()
-        for sched in ("pull", "naive", "auto"):
+        for sched in ("pull", "push", "naive", "auto"):
             for placement, kw in (
                 ("replicated", {}), ("partitioned", {"n_shards": 1}),
             ):
                 res = run_bsp(
                     cp.prog, g, f0, schedule=sched, placement=placement, **kw
                 )
-                key = "pull_staged" if sched in ("pull", "auto") else "naive"
+                key = {
+                    "pull": "pull_staged", "auto": "pull_staged",
+                    "push": "push", "naive": "naive",
+                }[sched]
                 assert res.supersteps == counts[key], (sched, placement)
                 assert np.array_equal(
                     np.asarray(dense["X"]), np.asarray(res.fields["X"])
@@ -145,14 +203,7 @@ end
         the invariant the STM cost models and all executors count on."""
         for name, src in alg.ALL.items():
             g, fields = _setup(name if name in ("sssp", "chain4") else "wcc")
-            if name == "mis":
-                fields = {"P": jnp.zeros((g.n_vertices,), jnp.float32)}
-            elif name == "bipartite_matching":
-                fields = {"Side": jnp.zeros((g.n_vertices,), jnp.int32)}
-            elif name == "kcore":
-                fields = {"K": jnp.full((g.n_vertices,), 2, jnp.int32)}
-            elif name == "chain4":
-                fields = {"D": jnp.zeros((g.n_vertices,), jnp.int32)}
+            fields = _stdlib_fields(name, g, fields)
             for step in _steps(alg.ALL[name], g, fields):
                 for sched in SCHEDULES:
                     plan = lower_step(step, schedule=sched)
@@ -164,9 +215,10 @@ end
 
 
 class TestAutoSelector:
-    def test_auto_matches_cheaper_hand_picked_plan(self):
-        """The selector's plan must be exactly the cheaper of the two
-        hand-picked lowerings (by the plan's own op count; ties → pull)."""
+    def test_auto_matches_cheapest_hand_picked_plan(self):
+        """The selector's plan must be exactly the cheapest of the three
+        hand-picked lowerings (by the plan's own op count; ties keep the
+        pull → push → naive preference order)."""
         for name, src in alg.ALL.items():
             g = G.erdos_renyi(30, 3.0, directed=False, weighted=True, seed=1)
             fields = {
@@ -176,20 +228,18 @@ class TestAutoSelector:
                 "K": jnp.full((30,), 2, jnp.int32),
             }
             for step in _steps(src, g, fields):
-                pull = lower_step(step, schedule="pull")
-                naive = lower_step(step, schedule="naive")
+                hand = [
+                    lower_step(step, schedule=s)
+                    for s in ("pull", "push", "naive")
+                ]
                 auto = lower_step(step, schedule="auto")
-                best = (
-                    pull
-                    if pull.n_supersteps <= naive.n_supersteps
-                    else naive
-                )
+                best = min(hand, key=lambda p: p.n_supersteps)
                 assert auto.ops == best.ops, (name, auto.describe())
                 assert auto.schedule == best.schedule
                 assert auto.requested == "auto"
 
     def test_auto_cost_model_lower_bounds(self):
-        """STM: auto ≤ min(pull_staged, naive) on any trip vector."""
+        """STM: auto ≤ min(pull_staged, push, naive) on any trip vector."""
         from repro.core.parser import parse
         from repro.core.stm import superstep_report
 
@@ -197,7 +247,59 @@ class TestAutoSelector:
             rep = superstep_report(parse(src))
             trips = {i: 3 for i in range(4)}
             assert rep["auto"].count(trips) <= rep["pull_staged"].count(trips)
+            assert rep["auto"].count(trips) <= rep["push"].count(trips)
             assert rep["auto"].count(trips) <= rep["naive"].count(trips)
+
+    def test_byte_aware_auto_never_costlier_and_flips_on_sparse(self):
+        """With a ByteCostModel, auto's score must lower-bound every
+        hand-picked schedule's score; on a deep chain with a tiny
+        (combined) request set it must abandon pull — pointer doubling
+        materializes intermediates at *every* vertex, so per-hop
+        request/reply wins the byte model there (ROADMAP's 'naive can win
+        on tiny request sets at deep chains', now selected for real)."""
+        g, fields = _setup("chain4")
+        (step,) = _steps(alg.CHAIN4, g, fields)
+        dense = ByteCostModel(n_vertices=g.n_vertices)
+        sparse = ByteCostModel(
+            n_vertices=g.n_vertices, request_set=4, combined_request_set=2
+        )
+        for costs in (dense, sparse):
+            auto = lower_step(step, schedule="auto", byte_costs=costs)
+            for s in ("pull", "push", "naive"):
+                hand = lower_step(step, schedule=s)
+                assert plan_score(auto, costs) <= plan_score(hand, costs), s
+        assert lower_step(step, schedule="auto", byte_costs=dense).schedule == "pull"
+        picked = lower_step(step, schedule="auto", byte_costs=sparse)
+        assert picked.schedule in ("push", "naive")
+        # message combining makes push the winner of the sparse regime
+        assert picked.schedule == "push"
+
+    def test_byte_aware_auto_matches_execution_and_stm(self):
+        """run_bsp(schedule="auto", byte_costs=...) must execute exactly
+        the superstep count the STM auto model (built with the same costs)
+        predicts, and still bit-match dense — on both placements."""
+        g, fields = _setup("chain4")
+        sparse = ByteCostModel(
+            n_vertices=g.n_vertices, request_set=4, combined_request_set=2
+        )
+        cp = compile_program(
+            alg.CHAIN4, g, initial_fields=fields, byte_costs=sparse
+        )
+        dense_out, _, counts = cp.run(fields)
+        # the auto model selected push for the one step of chain4
+        assert counts["auto"] == counts["push"] > counts["pull_staged"]
+        f0 = cp.init_fields(fields)
+        for placement, kw in (
+            ("replicated", {}), ("partitioned", {"n_shards": 1}),
+        ):
+            res = run_bsp(
+                cp.prog, g, f0, schedule="auto", placement=placement,
+                byte_costs=sparse, **kw,
+            )
+            assert res.supersteps == counts["auto"], placement
+            assert np.array_equal(
+                np.asarray(dense_out["D4"]), np.asarray(res.fields["D4"])
+            )
 
 
 MATRIX_ALGS = ["sssp", "wcc", "sv", "chain4"]
@@ -210,7 +312,7 @@ class TestExecutorScheduleMatrix:
     case below keeps one multi-shard representative)."""
 
     @pytest.mark.parametrize("name", MATRIX_ALGS)
-    @pytest.mark.parametrize("schedule", ["naive", "auto"])
+    @pytest.mark.parametrize("schedule", ["push", "naive", "auto"])
     def test_partitioned_matches_dense(self, name, schedule):
         g, fields = _setup(name)
         cp = compile_program(alg.ALL[name], g, initial_fields=fields)
@@ -234,7 +336,7 @@ class TestExecutorScheduleMatrix:
         g, fields = _setup(name)
         cp = compile_program(alg.ALL[name], g, initial_fields=fields)
         f0 = cp.init_fields(fields)
-        for schedule in ("pull", "naive", "auto"):
+        for schedule in ("pull", "push", "naive", "auto"):
             staged = run_bsp(cp.prog, g, f0, schedule=schedule)
             part = run_bsp(
                 cp.prog, g, f0, schedule=schedule,
@@ -242,56 +344,46 @@ class TestExecutorScheduleMatrix:
             )
             assert staged.supersteps == part.supersteps, (name, schedule)
 
-    def test_fused_dense_naive_schedule_matches_pull(self):
-        """compile_program(schedule="naive") folds the request/reply plan
-        into the fused trace; results are bit-identical to pull (the wire
-        term is exactly zero)."""
+    @pytest.mark.parametrize("schedule", ["push", "naive"])
+    def test_fused_dense_schedule_matches_pull(self, schedule):
+        """compile_program(schedule=...) folds the request/reply (or
+        request/combined-reply) plan into the fused trace; results are
+        bit-identical to pull (the wire term is exactly zero)."""
         for name in MATRIX_ALGS:
             g, fields = _setup(name)
             ref, _, _ = compile_program(
                 alg.ALL[name], g, initial_fields=fields
             ).run(fields)
             out, _, _ = compile_program(
-                alg.ALL[name], g, initial_fields=fields, schedule="naive"
+                alg.ALL[name], g, initial_fields=fields, schedule=schedule
             ).run(fields)
             for f in ref:
                 assert np.array_equal(
                     np.asarray(ref[f]), np.asarray(out[f]), equal_nan=True
                 ), (name, f)
 
+    def test_push_executed_counts_equal_palgol_push_modulo_fusion(self):
+        """Executed push supersteps == the unfused `push` STM total; the
+        paper-faithful `palgol_push` (state merging + iteration fusion)
+        differs only by those program-level optimizations, never by the
+        per-step expansion — both count the same plan ops now."""
+        for name in MATRIX_ALGS:
+            g, fields = _setup(name)
+            cp = compile_program(alg.ALL[name], g, initial_fields=fields)
+            _, _, counts = cp.run(fields)
+            f0 = cp.init_fields(fields)
+            res = run_bsp(cp.prog, g, f0, schedule="push")
+            assert res.supersteps == counts["push"], name
+            assert counts["palgol_push"] <= counts["push"], name
 
-class TestChainModeShim:
-    def test_chain_mode_global_still_honored_with_warning(self):
-        g, fields = _setup("chain4")
-        ref = compile_program(
-            alg.CHAIN4, g, initial_fields=fields, schedule="naive"
-        )
-        ref_out, _, _ = ref.run(fields)
-        old = codegen.CHAIN_MODE
-        try:
-            codegen.CHAIN_MODE = "naive"
-            cp = compile_program(alg.CHAIN4, g, initial_fields=fields)
-            with pytest.warns(DeprecationWarning):
-                out, _, _ = cp.run(fields)
-        finally:
-            codegen.CHAIN_MODE = old
-        assert np.array_equal(np.asarray(out["D4"]), np.asarray(ref_out["D4"]))
 
-    def test_explicit_schedule_bypasses_global(self):
-        g, fields = _setup("chain4")
-        old = codegen.CHAIN_MODE
-        try:
-            codegen.CHAIN_MODE = "naive"
-            import warnings
+def test_chain_mode_shim_removed():
+    """PR 3's one-release deprecation window is over: the mutable
+    ``codegen.CHAIN_MODE`` global must be gone for good."""
+    from repro.core import codegen
 
-            with warnings.catch_warnings():
-                warnings.simplefilter("error", DeprecationWarning)
-                cp = compile_program(
-                    alg.CHAIN4, g, initial_fields=fields, schedule="pull"
-                )
-                cp.run(fields)
-        finally:
-            codegen.CHAIN_MODE = old
+    assert not hasattr(codegen, "CHAIN_MODE")
+    assert not hasattr(codegen, "resolve_schedule")
 
 
 SUBPROCESS_TEST = textwrap.dedent(
@@ -305,13 +397,14 @@ SUBPROCESS_TEST = textwrap.dedent(
     from repro.pregel import run_bsp
 
     # one representative program: S-V has chain access (pointer doubling vs
-    # per-hop gather_global), neighborhood reads, and remote writes — every
-    # collective the naive partitioned path adds
+    # per-hop gather_global vs the push request/combined-reply rounds),
+    # neighborhood reads, and remote writes — every collective the
+    # push/naive partitioned paths add
     g = G.erdos_renyi(48, 3.0, directed=False, weighted=True, seed=3)
     cp = compile_program(alg.SV, g)
     dense, _, counts = cp.run()
     f0 = cp.init_fields()
-    for sched, key in (("naive", "naive"), ("auto", "auto")):
+    for sched, key in (("push", "push"), ("naive", "naive"), ("auto", "auto")):
         res = run_bsp(cp.prog, g, f0, schedule=sched, placement="partitioned")
         for f in dense:
             a, b = np.asarray(dense[f]), np.asarray(res.fields[f])
@@ -325,8 +418,8 @@ SUBPROCESS_TEST = textwrap.dedent(
 
 
 @pytest.mark.subprocess_mesh
-def test_partitioned_naive_multidevice_single_program():
-    """S-V under schedule="naive"/"auto" on the 8-fake-device mesh:
+def test_partitioned_schedules_multidevice_single_program():
+    """S-V under schedule="push"/"naive"/"auto" on the 8-fake-device mesh:
     bit-identical fields and plan-derived superstep counts vs dense."""
     res = subprocess.run(
         [sys.executable, "-c", SUBPROCESS_TEST],

@@ -5,7 +5,6 @@ the three superstep accountings must be consistently ordered.
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,9 +1,7 @@
 """Roofline HLO parsing + STM merging/fusion unit tests."""
 
-import numpy as np
 import pytest
 
-from repro.core import ast
 from repro.core.parser import parse
 from repro.core.stm import build_stm, superstep_report
 from repro.roofline.analysis import (

@@ -2,10 +2,8 @@
 CPU, asserting output shapes + no NaNs. Full configs are exercised only via
 the dry-run (ShapeDtypeStruct, no allocation) — see launch/dryrun.py."""
 
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
