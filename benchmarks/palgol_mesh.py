@@ -36,6 +36,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import compile_program
@@ -164,12 +165,22 @@ def comm_comparison(n_shards: int = 8) -> dict:
     }
 
 
-#: schedule → STM cost-model key (the count every executor charges)
+#: schedule → STM cost-model key for the UNFUSED expansion (what
+#: ``run_bsp(..., fuse=False)`` executes)
 SCHED_KEYS = {
     "pull": "pull_staged",
     "push": "push",
     "naive": "naive",
     "auto": "auto",
+}
+
+#: schedule → STM cost-model key for the §4.3-FUSED plan (state merging +
+#: iteration fusion — what every executor dispatches by default)
+FUSED_KEYS = {
+    "pull": "fused_pull",
+    "push": "fused_push",
+    "naive": "fused_naive",
+    "auto": "fused_auto",
 }
 
 
@@ -190,6 +201,16 @@ def schedule_report(
     actually charges), and the partitioned layout's padded bytes ×
     supersteps per iteration on the grid graph.
 
+    Each schedule cell reports both the unfused (``fuse=False``) and the
+    §4.3-fused (default execution) superstep totals — the
+    ``bench-plan-regression`` gate diffs both, so neither the per-step
+    expansion nor the program-level fuse pass can drift silently. Each
+    algo cell also records the measured per-iteration fixed-point frontier
+    (``active_set_per_iter``, from a staged ``run_bsp`` — the live
+    request-set figure ``ByteCostModel.request_set`` models) and, for the
+    chain-access programs, the measured request-dedup savings of
+    ``gather_global``'s unique pass (``gather_dedup``).
+
     ``auto_byte_regimes`` shows where the byte-aware selector flips: under
     the *dense* regime (every vertex reads its chain — pull's best case)
     and the *sparse* regime (request set = the grid halo, combined further
@@ -202,7 +223,12 @@ def schedule_report(
     """
     from repro.core.plan import program_plan_records
     from repro.graph import generators as G
-    from repro.graph.partition import byte_cost_model, comm_bytes_report
+    from repro.graph.partition import (
+        byte_cost_model,
+        comm_bytes_report,
+        request_dedup_report,
+    )
+    from repro.pregel import run_bsp
 
     grid = G.grid2d(*grid_shape)
     grid_rep = comm_bytes_report(grid, n_shards)
@@ -225,19 +251,44 @@ def schedule_report(
     for algo in algos:
         init_fields = None
         if algo == "chain4":
-            init_fields = {"D": jnp.zeros((64,), jnp.int32)}
+            # a random indirection field: makes the chain request sets (and
+            # the dedup measurement below) non-degenerate; plan-derived
+            # counts are structural, so the regression gate is unaffected
+            rng = np.random.default_rng(0)
+            init_fields = {"D": jnp.asarray(rng.integers(0, 64, 64), jnp.int32)}
         cp = compile_program(alg.ALL[algo], small, initial_fields=init_fields)
-        _, trips, counts = cp.run(init_fields)
+        dense_out, trips, counts = cp.run(init_fields)
+        staged = run_bsp(
+            cp.prog, small, cp.init_fields(init_fields), schedule="pull"
+        )
 
-        cell = {}
+        cell = {
+            # measured fixed-point frontier per loop entry, per iteration —
+            # the live request-set instrumentation replacing the supplied
+            # ByteCostModel.request_set constant
+            "active_set_per_iter": staged.active_sets,
+        }
+        # measured request-dedup savings of gather_global's unique pass on
+        # the programs' real indirection fields (the chain request sets)
+        if algo == "sv":
+            cell["gather_dedup"] = request_dedup_report(
+                dense_out["D"], small.n_vertices
+            )
+        elif algo == "chain4":
+            cell["gather_dedup"] = request_dedup_report(
+                init_fields["D"], small.n_vertices
+            )
         for sched, key in SCHED_KEYS.items():
             total = counts[key]
+            fused_total = counts[FUSED_KEYS[sched]]
             cell[sched] = {
                 "steps": program_plan_records(
                     cp.step_plans(sched), costs=dense_costs
                 ),
                 "executed_supersteps": total,
+                "fused_supersteps": fused_total,
                 "grid_padded_bytes_total": total * grid_bytes,
+                "grid_padded_bytes_total_fused": fused_total * grid_bytes,
             }
         cell["auto_byte_regimes"] = {
             regime: [
@@ -263,19 +314,22 @@ def schedule_report(
         },
         "per_algo": out,
         "note": (
-            "superstep counts are plan-derived (len(StepPlan.ops) per step, "
-            "STM cost model on measured trips); per-step 'bytes' is the "
-            "plan byte model under the dense regime; bytes totals are the "
-            "grid graph's partitioned padded per-superstep cost times "
-            "executed supersteps"
+            "superstep counts are plan-derived (STM cost models on "
+            "measured trips): 'executed_supersteps' is the unfused per-op "
+            "expansion (fuse=False), 'fused_supersteps' the §4.3-fused "
+            "plan every executor dispatches by default; per-step 'bytes' "
+            "is the plan byte model under the dense regime; bytes totals "
+            "are the grid graph's partitioned padded per-superstep cost "
+            "times supersteps"
         ),
     }
 
 
 def check_plan_regression(bench: dict, committed_path: Path) -> list:
-    """Diff plan-derived superstep counts per (program × schedule) against
-    the committed benchmark JSON. Returns a list of drift descriptions
-    (empty = clean). Byte figures are deliberately NOT compared — they
+    """Diff plan-derived superstep counts per (program × schedule) —
+    unfused AND fused — against the committed benchmark JSON. Returns a
+    list of drift descriptions (empty = clean). Byte figures and the
+    measured frontier/dedup cells are deliberately NOT compared — they
     scale with the grid, which ``--quick`` shrinks; the plan-derived
     counts and resolved schedules must be graph-size-invariant.
     """
@@ -292,10 +346,11 @@ def check_plan_regression(bench: dict, committed_path: Path) -> list:
             if old is None or new is None:
                 drifts.append(f"{algo}/{sched}: present in only one report")
                 continue
-            for fld in ("executed_supersteps",):
-                if old[fld] != new[fld]:
+            for fld in ("executed_supersteps", "fused_supersteps"):
+                if old.get(fld) != new.get(fld):
                     drifts.append(
-                        f"{algo}/{sched}: {fld} {old[fld]} -> {new[fld]}"
+                        f"{algo}/{sched}: {fld} {old.get(fld)} -> "
+                        f"{new.get(fld)}"
                     )
             old_steps = [
                 (s["resolved"], s["supersteps"]) for s in old["steps"]
@@ -350,10 +405,20 @@ def main():
     out_path.write_text(json.dumps(bench, indent=1))
     for algo, cell in bench["schedules"]["per_algo"].items():
         per = {
-            s: cell[s]["executed_supersteps"] for s in SCHED_KEYS if s in cell
+            s: f"{cell[s]['fused_supersteps']}/{cell[s]['executed_supersteps']}"
+            for s in SCHED_KEYS
+            if s in cell
         }
-        print(f"{algo}: supersteps {per} "
+        print(f"{algo}: supersteps fused/unfused {per} "
               f"auto_bytes={cell['auto_byte_regimes']}", flush=True)
+        if "gather_dedup" in cell:
+            d = cell["gather_dedup"]
+            print(
+                f"  gather dedup: {d['raw_request_slots']} -> "
+                f"{d['deduped_request_slots']} slots "
+                f"({d['raw_bytes']} -> {d['deduped_bytes']} B)",
+                flush=True,
+            )
     if args.check:
         drifts = check_plan_regression(bench, Path(args.check))
         if drifts:

@@ -48,7 +48,8 @@ def run(scale: int = 10):
         dense_out, _ = fused(f0)
 
         def manual(f0=f0, prog=cp.prog, g=g):
-            return run_bsp(prog, g, f0, schedule="naive").fields
+            # the manual baseline has no §4.3 merging/fusion: fuse=False
+            return run_bsp(prog, g, f0, schedule="naive", fuse=False).fields
 
         # run_bsp jits per-stage internally; warm indirectly via one call
         import time as _t

@@ -45,7 +45,8 @@ def main():
     bsp_pull = run_bsp(cp.prog, g, f0, schedule="pull")
     t_pull = time.perf_counter() - t0
     t0 = time.perf_counter()
-    bsp_naive = run_bsp(cp.prog, g, f0, schedule="naive")
+    # the manual-style baseline keeps the unfused request/reply expansion
+    bsp_naive = run_bsp(cp.prog, g, f0, schedule="naive", fuse=False)
     t_naive = time.perf_counter() - t0
 
     assert np.array_equal(D, np.asarray(bsp_pull.fields["D"]))

@@ -153,8 +153,14 @@ def restore_checkpoint(
                             if p is not None else ()
                         )
                         ok = all(a in mesh.shape for a in axes)
-                        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
-                        ok = ok and (dim < arr.ndim and size and arr.shape[dim] % size == 0)
+                        size = (
+                            int(np.prod([mesh.shape[a] for a in axes]))
+                            if axes
+                            else 1
+                        )
+                        ok = ok and (
+                            dim < arr.ndim and size and arr.shape[dim] % size == 0
+                        )
                         clean.append(p if (ok and axes) else None)
                     sh = NamedSharding(mesh, PartitionSpec(*clean))
                 else:

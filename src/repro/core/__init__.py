@@ -10,14 +10,25 @@ Public API:
 from repro.core.parser import parse
 from repro.core.compiler import compile_program
 from repro.core.interpreter import interpret
-from repro.core.plan import ByteCostModel, StepPlan, lower_step, plan_bytes
+from repro.core.plan import (
+    ByteCostModel,
+    ProgramPlan,
+    StepPlan,
+    fuse,
+    lower_program,
+    lower_step,
+    plan_bytes,
+)
 
 __all__ = [
     "parse",
     "compile_program",
     "interpret",
     "ByteCostModel",
+    "ProgramPlan",
     "StepPlan",
+    "fuse",
+    "lower_program",
     "lower_step",
     "plan_bytes",
 ]

@@ -101,7 +101,11 @@ def chain_pattern_of(expr: ast.Expr, vertex_var: str) -> Optional[logic.Pattern]
 
 def neighbor_pattern_of(expr: ast.Expr, edge_var: str) -> Optional[logic.Pattern]:
     """Chain pattern starting from ``e.id`` (neighborhood communication)."""
-    if isinstance(expr, ast.EdgeProp) and expr.edge_var == edge_var and expr.prop == "id":
+    if (
+        isinstance(expr, ast.EdgeProp)
+        and expr.edge_var == edge_var
+        and expr.prop == "id"
+    ):
         return ()
     if isinstance(expr, ast.FieldAccess):
         inner = neighbor_pattern_of(expr.index, edge_var)

@@ -32,14 +32,17 @@ from repro.core import ast
 from repro.core.analysis import CompileError, chain_pattern_of
 from repro.core.logic import PullSolver
 from repro.core.plan import (
+    HALTED,
+    IterInit,
     MainCompute,
+    OpRef,
     ReadRound,
+    RemoteUpdate,
     StepPlan,
+    StopOp,
     lower_step,
 )
 from repro.graph import ops as gops
-
-HALTED = "_halted"
 
 # NOTE: the deprecated ``codegen.CHAIN_MODE`` module global (PR 3's
 # one-release shim) is gone; the schedule is the explicit ``schedule=``
@@ -90,6 +93,19 @@ class _RemoteMsg:
     idx: jax.Array
     values: jax.Array
     mask: jax.Array  # same shape as idx
+
+
+@dataclasses.dataclass
+class _StepState:
+    """One step's cross-superstep context under the fused program plan:
+    what the step's remote-reading supersteps materialized and its main
+    superstep emitted, threaded between the supersteps its plan ops landed
+    in (the typed view of the executors' string-keyed mailbox)."""
+
+    chain: Dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
+    nbr: Dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
+    pending: List[_RemoteMsg] = dataclasses.field(default_factory=list)
+    naive_req: Dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
 
 
 class StepExecutor:
@@ -177,6 +193,48 @@ class StepExecutor:
         self.active = self._active_mask(fields)
         self._apply_remote()
         return self.new
+
+    def run_ops(self, fields, ops, state: Optional["_StepState"] = None):
+        """Execute a slice of this step's plan ops — the per-superstep entry
+        point of the fused program plan (``repro.core.plan.ProgramPlan``),
+        where one fused superstep may hold ops from several steps and a
+        step's ops may land in different supersteps.
+
+        ``state`` threads the step's cross-superstep context (materialized
+        chain/neighborhood buffers, pending remote messages, naive request
+        buffers) between slices; results are identical to one ``__call__``
+        over the whole plan because ReadRounds never write fields — each
+        slice re-snapshotting ``fields`` sees exactly the state the unfused
+        superstep at that position would.
+        """
+        state = state if state is not None else _StepState()
+        self.old = dict(fields)
+        self.new = dict(fields)
+        self.env = {}
+        self.chain_cache = dict(state.chain)
+        self.nbr_cache = dict(state.nbr)
+        self.expr_cache = {}
+        self.pending = list(state.pending)
+        self._naive_req = dict(state.naive_req)
+        self.active = self._active_mask(fields)
+        for op in ops:
+            if isinstance(op, ReadRound):
+                self._exec_read_round(op)
+            elif isinstance(op, MainCompute):
+                self._exec_stmts(self.step.body, mask=None, ectx=None)
+            else:  # RemoteUpdate
+                self._apply_remote()
+                self.pending = []
+        out_state = _StepState(
+            # axioms (vertex ids / single-field reads) must not outlive the
+            # superstep — a carried copy would go stale once the field is
+            # written; only materialized multi-hop buffers are the mailbox
+            chain={p: v for p, v in self.chain_cache.items() if len(p) > 1},
+            nbr=dict(self.nbr_cache),
+            pending=list(self.pending),
+            naive_req=dict(self._naive_req),
+        )
+        return self.new, out_state
 
     # -- helpers ------------------------------------------------------------
     def _active_mask(self, fields) -> jax.Array:
@@ -565,6 +623,98 @@ def _binop(op: str, lhs, rhs):
     if op == "||":
         return jnp.logical_or(lhs, rhs)
     raise CompileError(f"unknown operator {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# fused-program-plan execution: one Superstep part at a time
+#
+# The program-level mailbox is a flat string-keyed dict so every consumer
+# (the fused dense trace, the partitioned shard_map body) can thread it as
+# one pytree. Keys are namespaced by step ordinal (``s<i>:``) so two steps
+# materializing the same chain pattern cannot collide:
+#
+#   s<i>:chain:<f1>/<f2>...   materialized chain buffer (pattern-keyed)
+#   s<i>:nbr:<dir>:<f1>...    per-edge neighborhood buffer
+#   s<i>:req:<f1>/...         naive request buffer (dense wire emulation)
+#   s<i>:pending              remote-write payload (Main -> RemoteUpdate),
+#                             a tuple of (idx, values, mask) triples in
+#                             RemoteUpdate.writes order
+
+
+def _pat_key(pattern: tuple) -> str:
+    return "/".join(pattern)
+
+
+def _ns_import(ns: str, mailbox, ru_writes) -> "_StepState":
+    """Decode one step's mailbox entries into its typed _StepState."""
+    state = _StepState()
+    for k, v in mailbox.items():
+        if not k.startswith(ns):
+            continue
+        rest = k[len(ns):]
+        if rest.startswith("chain:"):
+            state.chain[tuple(rest[len("chain:"):].split("/"))] = v
+        elif rest.startswith("nbr:"):
+            _, direction, pat = rest.split(":", 2)
+            state.nbr[(direction, tuple(pat.split("/")) if pat else ())] = v
+        elif rest.startswith("req:"):
+            state.naive_req[tuple(rest[len("req:"):].split("/"))] = v
+        elif rest == "pending":
+            state.pending = [
+                _RemoteMsg(f, op, idx, val, mask)
+                for (f, op), (idx, val, mask) in zip(ru_writes, v)
+            ]
+    return state
+
+
+def _ns_export(ns: str, mailbox, op, state: "_StepState"):
+    """Re-encode a step's post-op state into the mailbox.
+
+    The drop policy keeps loop-carried mailbox keysets stable (a fixed
+    while-carry structure for the fused dense trace, one retrace per
+    superstep for the dispatching executors): MainCompute consumes the
+    step's read buffers, RemoteUpdate consumes its pending payload — after
+    a step's last op only prefetched entries (re-created by the fused
+    loop's trailing ReadRound) remain.
+    """
+    out = {k: v for k, v in mailbox.items() if not k.startswith(ns)}
+    pending = tuple((m.idx, m.values, m.mask) for m in state.pending)
+    if isinstance(op, ReadRound):
+        for p, v in state.chain.items():
+            out[f"{ns}chain:{_pat_key(p)}"] = v
+        for (d, p), v in state.nbr.items():
+            out[f"{ns}nbr:{d}:{_pat_key(p)}"] = v
+        for p, v in state.naive_req.items():
+            out[f"{ns}req:{_pat_key(p)}"] = v
+        if pending:
+            out[f"{ns}pending"] = pending
+    elif isinstance(op, MainCompute):
+        if pending:
+            out[f"{ns}pending"] = pending
+    # RemoteUpdate: everything consumed
+    return out
+
+
+def exec_plan_part(ref: OpRef, graph, comm, fields, mailbox):
+    """Execute one part of a fused :class:`~repro.core.plan.Superstep`.
+
+    The shared per-op consumer of the program plan: the fused dense
+    compiler folds these calls into its single trace (``comm=None``) and
+    the partitioned executor runs them inside its per-superstep shard_map
+    body (``comm=ShardComm``). Returns ``(fields, mailbox)``.
+    """
+    op = ref.op
+    if isinstance(op, IterInit):
+        return fields, mailbox
+    if isinstance(op, StopOp):
+        return make_stop_fn(op.stop, graph, comm=comm)(fields), mailbox
+    ns = f"s{ref.sidx}:"
+    plan = ref.plan
+    ru = next((o for o in plan.ops if isinstance(o, RemoteUpdate)), None)
+    state = _ns_import(ns, mailbox, ru.writes if ru is not None else ())
+    ex = StepExecutor(plan.step, graph, comm=comm, plan=plan)
+    fields, state = ex.run_ops(fields, [op], state)
+    return fields, _ns_export(ns, mailbox, op, state)
 
 
 def make_stop_fn(stop: ast.StopStep, graph, comm=None):

@@ -19,26 +19,14 @@ import jax.numpy as jnp
 
 from repro.core import ast
 from repro.core import parser as palgol_parser
+from repro.core import plan as plan_mod
 from repro.core import stm as stm_mod
 from repro.core.analysis import CompileError, iter_steps
-from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
-from repro.core.plan import ByteCostModel, SCHEDULES, StepPlan, lower_step
+from repro.core.codegen import HALTED, StepExecutor, exec_plan_part, make_stop_fn
+from repro.core.plan import ByteCostModel, SCHEDULES, lower_step
 
-
-def _iter_nodes(prog: ast.Prog) -> List[ast.Iter]:
-    """Pre-order list of Iter nodes — index order matches stm.build_stm."""
-    out: List[ast.Iter] = []
-
-    def go(p):
-        if isinstance(p, ast.Seq):
-            for q in p.progs:
-                go(q)
-        elif isinstance(p, ast.Iter):
-            out.append(p)
-            go(p.body)
-
-    go(prog)
-    return out
+# pre-order Iter list — the shared iteration-counter index order
+_iter_nodes = plan_mod.iter_nodes
 
 
 @dataclasses.dataclass
@@ -55,6 +43,10 @@ class CompiledProgram:
     # per-round byte estimates feeding the byte-aware ``auto`` selector
     # (None: auto selects on op count alone)
     byte_costs: Optional[ByteCostModel] = None
+    # apply the §4.3 fuse pass (state merging + iteration fusion) to the
+    # program plan ``fn`` folds into its trace; False keeps the unfused
+    # per-op expansion for A/B comparisons
+    fuse: bool = True
 
     def step_plans(
         self, schedule: Optional[str] = None
@@ -69,6 +61,23 @@ class CompiledProgram:
             for s in iter_steps(self.prog)
             if isinstance(s, ast.Step)
         ]
+
+    def program_plan(
+        self,
+        schedule: Optional[str] = None,
+        fuse: Optional[bool] = None,
+    ) -> plan_mod.ProgramPlan:
+        """The whole-program superstep schedule ``fn`` executes — fused by
+        default (§4.3 state merging + iteration fusion applied for real)."""
+        sched = (
+            schedule if schedule is not None else self.schedule
+        ) or "pull"
+        pp = plan_mod.lower_program(
+            self.prog, schedule=sched, byte_costs=self.byte_costs
+        )
+        if self.fuse if fuse is None else fuse:
+            pp = plan_mod.fuse(pp)
+        return pp
 
     def init_fields(self, user_fields: Optional[Dict[str, jax.Array]] = None):
         """Canonical field dict: user fields + zero-init for created fields."""
@@ -90,67 +99,69 @@ class CompiledProgram:
     def fn(self, fields: Dict[str, jax.Array], graph=None):
         """Pure program function: fields → (fields, trips[i32[n_iters]]).
 
+        Folds the (by default fused) :class:`~repro.core.plan.ProgramPlan`
+        into one trace: superstep parts execute in plan order against the
+        program-level mailbox, and a fused loop's prefetched ReadRound
+        buffers ride the ``lax.while_loop`` carry — the loop-back edge of
+        §4.3.2 iteration fusion, traced for real.
+
         ``graph`` overrides the compile-time graph *data* (same static
         shape), making the graph a traced argument — required when lowering
         against a device mesh (closure arrays would bake in as constants).
         """
         graph = graph if graph is not None else self.graph
-        iter_ids = {id(node): i for i, node in enumerate(_iter_nodes(self.prog))}
+        pp = self.program_plan()
         trips0 = jnp.zeros((max(self.n_iters, 1),), jnp.int32)
-        sched = self.schedule or "pull"
-        plans: Dict[int, StepPlan] = {}
 
-        def plan_for(step: ast.Step) -> StepPlan:
-            if id(step) not in plans:
-                plans[id(step)] = lower_step(
-                    step, schedule=sched, byte_costs=self.byte_costs
-                )
-            return plans[id(step)]
-
-        def run(p: ast.Prog, flds, trips):
-            if isinstance(p, ast.Step):
-                return StepExecutor(p, graph, plan=plan_for(p))(flds), trips
-            if isinstance(p, ast.StopStep):
-                return make_stop_fn(p, graph)(flds), trips
-            if isinstance(p, ast.Seq):
-                for q in p.progs:
-                    flds, trips = run(q, flds, trips)
-                return flds, trips
-            if isinstance(p, ast.Iter):
-                idx = iter_ids[id(p)]
-                fix = p.fix_fields
+        def run_items(items, flds, mailbox, trips):
+            for it in items:
+                if isinstance(it, plan_mod.Superstep):
+                    for ref in it.parts:
+                        flds, mailbox = exec_plan_part(
+                            ref, graph, None, flds, mailbox
+                        )
+                    continue
+                # PlanLoop: the mailbox joins the while carry — prefetched
+                # chain/nbr buffers are re-created by the fused body's
+                # trailing ReadRound, so the carry structure is stable
+                fix = it.node.fix_fields
                 limit = (
-                    p.fixed_trips if p.fixed_trips is not None else self.max_iters
+                    it.node.fixed_trips
+                    if it.node.fixed_trips is not None
+                    else self.max_iters
                 )
+                for name in fix:
+                    if name not in flds:
+                        raise CompileError(f"fix field {name!r} undefined")
 
-                def cond(carry):
-                    _, _, changed, k = carry
-                    return jnp.logical_and(changed, k < limit)
+                def cond(carry, _limit=limit):
+                    _, _, _, changed, k = carry
+                    return jnp.logical_and(changed, k < _limit)
 
-                def body(carry):
-                    f, t, _, k = carry
-                    new_f, t = run(p.body, f, t)
-                    if fix:
+                def body(carry, _it=it, _fix=fix):
+                    f, m, t, _, k = carry
+                    new_f, m, t = run_items(_it.body, f, m, t)
+                    if _fix:
                         changed = jnp.asarray(False)
-                        for name in fix:
-                            if name not in f:
-                                raise CompileError(
-                                    f"fix field {name!r} undefined"
-                                )
+                        for name in _fix:
                             changed = jnp.logical_or(
                                 changed, jnp.any(new_f[name] != f[name])
                             )
                     else:
                         changed = jnp.asarray(True)  # fixed-trip iteration
-                    t = t.at[idx].add(1)
-                    return new_f, t, changed, k + 1
+                    t = t.at[_it.iter_index].add(1)
+                    return new_f, m, t, changed, k + 1
 
-                carry = (flds, trips, jnp.asarray(True), jnp.asarray(0, jnp.int32))
-                flds, trips, _, _ = jax.lax.while_loop(cond, body, carry)
-                return flds, trips
-            raise CompileError(f"unknown program node {type(p).__name__}")
+                carry = (
+                    flds, mailbox, trips,
+                    jnp.asarray(True), jnp.asarray(0, jnp.int32),
+                )
+                flds, mailbox, trips, _, _ = jax.lax.while_loop(
+                    cond, body, carry
+                )
+            return flds, mailbox, trips
 
-        out_fields, trips = run(self.prog, dict(fields), trips0)
+        out_fields, _, trips = run_items(pp.items, dict(fields), {}, trips0)
         return out_fields, trips
 
     def run(
@@ -219,6 +230,7 @@ def compile_program(
     max_iters: int = 100_000,
     schedule: Optional[str] = None,
     byte_costs: Optional[ByteCostModel] = None,
+    fuse: bool = True,
 ) -> CompiledProgram:
     """Compile Palgol source (or AST) against a graph.
 
@@ -236,6 +248,12 @@ def compile_program(
     on (supersteps, modeled wire bytes) instead of op count; the STM
     ``auto`` cost model is built with the same costs so the accounting
     tracks the selection.
+
+    ``fuse`` (default True) applies the §4.3 program-level optimizations
+    (state merging + iteration fusion, :func:`repro.core.plan.fuse`) to the
+    plan the trace folds in; ``fuse=False`` keeps the unfused per-op
+    expansion for A/B comparisons. Results are bit-identical either way —
+    fusion moves superstep boundaries, never reorders primitive ops.
     """
     prog = (
         palgol_parser.parse(source_or_ast)
@@ -264,4 +282,5 @@ def compile_program(
         cost_models=cost_models,
         schedule=schedule,
         byte_costs=byte_costs,
+        fuse=fuse,
     )

@@ -166,7 +166,9 @@ class Parser:
             return self.parse_iter()
         if t.kind == "stop":
             return self.parse_stop()
-        raise PalgolSyntaxError(f"line {t.line}: expected step/do/stop, got {t.value!r}")
+        raise PalgolSyntaxError(
+            f"line {t.line}: expected step/do/stop, got {t.value!r}"
+        )
 
     def parse_step(self) -> ast.Step:
         self.expect("for")
@@ -384,7 +386,11 @@ class Parser:
         if t.kind == "NAME":
             name = t.value
             # reduce comprehension: func [ body | var <- range, filters ]
-            if name in _REDUCE_FUNCS and self.peek().kind == "OP" and self.peek().value == "[":
+            if (
+                name in _REDUCE_FUNCS
+                and self.peek().kind == "OP"
+                and self.peek().value == "["
+            ):
                 self.next()  # [
                 body = self.parse_expr()
                 self.expect("OP", "|")

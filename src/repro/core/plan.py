@@ -64,6 +64,10 @@ from repro.core import ast
 from repro.core.analysis import StepInfo, analyze_step
 from repro.core.logic import Pattern, PullSolver, PushPlan, PushSolver
 
+#: the halted-mask pseudo-field (paper §3.4); lives here so the plan IR's
+#: read/write-set analysis and the executors share one spelling
+HALTED = "_halted"
+
 #: the schedules lower_step accepts
 SCHEDULES = ("pull", "push", "naive", "auto")
 
@@ -557,3 +561,346 @@ def lower_step(
         return min(candidates, key=lambda p: plan_score(p, byte_costs))
     ops = _LOWERERS[schedule](step, info)
     return StepPlan(step, info, schedule, schedule, tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# the whole-program plan: lower_program + the §4.3 fuse pass
+#
+# ``lower_step`` expands ONE step; a Palgol program is a Seq/Iter tree of
+# steps, and the paper's headline optimizations (§4.3 state merging and
+# iteration fusion) only exist at that program level. ``lower_program``
+# lowers every step and linearizes the tree into a :class:`ProgramPlan` —
+# ``Superstep`` items (one device dispatch each) and ``PlanLoop`` items
+# (host-checked fixed points) — and :func:`fuse` rewrites it so the
+# optimized schedule is what the executors actually dispatch. The STM cost
+# models (``repro.core.stm``) count the same fused items, so optimized
+# accounting equals optimized execution by construction — the program-level
+# twin of the per-step invariant ``len(plan.ops) == supersteps``.
+
+
+@dataclasses.dataclass(frozen=True)
+class IterInit:
+    """The iteration Init superstep (paper Fig. 11): sets up the
+    OR-aggregator for the first termination check. No field reads/writes,
+    so it merges freely and is the landing pad for the fused loop's
+    prefetched first ReadRound."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StopOp:
+    """One StopStep superstep: evaluate the condition, flip the halted
+    mask (writes :data:`HALTED` only)."""
+
+    stop: ast.StopStep
+
+
+@dataclasses.dataclass(frozen=True)
+class OpRef:
+    """One primitive plan op with its owning step context.
+
+    ``plan`` is the owning :class:`StepPlan` (None for IterInit/StopOp);
+    ``sidx`` is the step ordinal in program order — the executors' mailbox
+    namespace, so two steps materializing the same chain pattern cannot
+    collide once supersteps from different steps share a program-level
+    mailbox.
+    """
+
+    op: object  # ReadRound | MainCompute | RemoteUpdate | IterInit | StopOp
+    plan: Optional[StepPlan] = None
+    sidx: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Superstep:
+    """One fused Pregel superstep: its parts execute *in order* inside one
+    dispatch. Sequencing is the fusion-correctness argument: a merged
+    superstep runs exactly the primitive op sequence the unfused plan runs,
+    only the dispatch boundaries move — so fused execution bit-matches
+    unfused by construction. ``head`` marks the first superstep of its
+    program node (the only legal merge target, as in §4.3.1)."""
+
+    parts: Tuple[OpRef, ...]
+    head: bool = False
+
+    def describe(self) -> str:
+        names = []
+        for ref in self.parts:
+            op = ref.op
+            if isinstance(op, ReadRound):
+                names.append(f"RR[{op.kind}]")
+            elif isinstance(op, MainCompute):
+                names.append("Main")
+            elif isinstance(op, RemoteUpdate):
+                names.append("RU")
+            elif isinstance(op, IterInit):
+                names.append("Init")
+            else:
+                names.append("Stop")
+        return "+".join(names)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanLoop:
+    """A fixed-point / fixed-trip iteration: ``body`` items execute per
+    trip; ``fused`` records whether the §4.3.2 loop-back fusion fired (the
+    body's first ReadRound was duplicated into the preceding superstep and
+    merged into the body's last superstep)."""
+
+    body: Tuple[object, ...]  # Superstep | PlanLoop
+    node: ast.Iter
+    iter_index: int
+    fused: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramPlan:
+    """The whole Palgol program as an executable superstep schedule."""
+
+    prog: ast.Prog
+    schedule: str
+    items: Tuple[object, ...]  # Superstep | PlanLoop
+    fused: bool
+    step_plans: Tuple[Tuple[ast.Step, StepPlan], ...]
+
+    def cost(self) -> Tuple[int, Dict[int, int], List[str]]:
+        """``(base, per_iter, detail)`` — supersteps as a linear functional
+        of the trip counts, counted off the very items the executors walk
+        (the STM :class:`~repro.core.stm.CostModel` wraps this)."""
+        base = [0]
+        per_iter: Dict[int, int] = {}
+        detail: List[str] = []
+
+        def count(items, key):
+            for it in items:
+                if isinstance(it, Superstep):
+                    if key is None:
+                        base[0] += 1
+                    else:
+                        per_iter[key] = per_iter.get(key, 0) + 1
+                else:
+                    count(it.body, it.iter_index)
+
+        count(self.items, None)
+        for it in self.items:
+            detail.extend(_loop_details(it))
+        return base[0], per_iter, detail
+
+    def describe(self) -> List[str]:
+        """One line per item, loops indented — the dry-run rendering."""
+        out: List[str] = []
+
+        def go(items, depth):
+            pad = "  " * depth
+            for it in items:
+                if isinstance(it, Superstep):
+                    out.append(pad + it.describe())
+                else:
+                    out.append(
+                        pad + f"loop#{it.iter_index} (fused={it.fused}):"
+                    )
+                    go(it.body, depth + 1)
+
+        go(self.items, 0)
+        return out
+
+
+def _loop_details(item, out=None) -> List[str]:
+    out = [] if out is None else out
+    if isinstance(item, PlanLoop):
+        n = sum(1 for b in item.body if isinstance(b, Superstep))
+        out.append(
+            f"loop#{item.iter_index}: {n} supersteps/iter "
+            f"(fused={item.fused})"
+        )
+        for b in item.body:
+            _loop_details(b, out)
+    return out
+
+
+def iter_nodes(prog: ast.Prog) -> List[ast.Iter]:
+    """Pre-order list of Iter nodes — the iteration-counter index order
+    shared by the compiler's trips vector and the cost models."""
+    out: List[ast.Iter] = []
+
+    def go(p):
+        if isinstance(p, ast.Seq):
+            for q in p.progs:
+                go(q)
+        elif isinstance(p, ast.Iter):
+            out.append(p)
+            go(p.body)
+
+    go(prog)
+    return out
+
+
+def lower_program(
+    prog: ast.Prog,
+    schedule: str = "pull",
+    byte_costs: Optional[ByteCostModel] = None,
+) -> ProgramPlan:
+    """Lower a whole Palgol program to its (unfused) :class:`ProgramPlan`:
+    one single-part :class:`Superstep` per plan op — exactly the expansion
+    the staged executor has always dispatched. Apply :func:`fuse` for the
+    §4.3-optimized schedule."""
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; expected one of {SCHEDULES}"
+        )
+    loop_idx = {id(node): i for i, node in enumerate(iter_nodes(prog))}
+    sidx = [0]
+    plans: List[Tuple[ast.Step, StepPlan]] = []
+
+    def lower(p) -> List[object]:
+        if isinstance(p, ast.Step):
+            plan = lower_step(p, schedule=schedule, byte_costs=byte_costs)
+            si = sidx[0]
+            sidx[0] += 1
+            plans.append((p, plan))
+            return [
+                Superstep((OpRef(op, plan, si),), head=(i == 0))
+                for i, op in enumerate(plan.ops)
+            ]
+        if isinstance(p, ast.StopStep):
+            return [Superstep((OpRef(StopOp(p)),), head=True)]
+        if isinstance(p, ast.Seq):
+            out: List[object] = []
+            for q in p.progs:
+                out.extend(lower(q))
+            return out
+        if isinstance(p, ast.Iter):
+            body = lower(p.body)
+            return [
+                Superstep((OpRef(IterInit()),), head=True),
+                PlanLoop(tuple(body), p, loop_idx[id(p)], fused=False),
+            ]
+        raise TypeError(f"unknown program node {type(p).__name__}")
+
+    items = tuple(lower(prog))
+    return ProgramPlan(
+        prog=prog,
+        schedule=schedule,
+        items=items,
+        fused=False,
+        step_plans=tuple(plans),
+    )
+
+
+def _op_writes(ref: OpRef) -> frozenset:
+    """Fields the op writes within its superstep."""
+    op = ref.op
+    if isinstance(op, MainCompute):
+        return frozenset(ref.plan.info.local_write_fields)
+    if isinstance(op, RemoteUpdate):
+        return frozenset(f for f, _ in op.writes)
+    if isinstance(op, StopOp):
+        return frozenset((HALTED,))
+    return frozenset()  # ReadRound / IterInit: mailbox only
+
+
+def _round_reads(ref: OpRef) -> frozenset:
+    """Fields whose pre-superstep values a ReadRound's gathers/sends read
+    (every field named in its chain / neighborhood / address patterns;
+    general computed-index reads over-approximate to the step's full read
+    set — the safe direction: a too-big set only withholds a merge)."""
+    op = ref.op
+    fields = set()
+    for ce in op.chains:
+        fields.update(ce.pattern)
+    for _, pat in op.nbr_sends:
+        fields.update(pat)
+    for s in op.sends:
+        fields.update(s.target)
+        fields.update(s.expr)
+        fields.update(s.via)
+    if op.general and ref.plan is not None:
+        fields.update(ref.plan.info.fields_read)
+    return frozenset(fields)
+
+
+def _merge_ok(prev: Superstep, nxt: Superstep) -> bool:
+    """§4.3.1 state-merging legality at a program-node boundary.
+
+    The paper's condition is message independence: the next node's first
+    superstep must not consume messages produced inside the merged
+    superstep. A leading MainCompute (a step with no remote reads), a
+    StopStep, or an iteration Init consumes no messages — they merge
+    unconditionally. A leading ReadRound *initiates* communication whose
+    request set / payload is read from field state; we additionally require
+    its read set to be disjoint from everything the previous superstep
+    writes, so every fused op's outgoing communication is derivable from
+    pre-superstep state (the conservative refinement that keeps merged
+    collectives combinable in the partitioned executor)."""
+    first = nxt.parts[0]
+    if not isinstance(first.op, ReadRound):
+        return True
+    writes = frozenset().union(*(_op_writes(p) for p in prev.parts))
+    return not (writes & _round_reads(first))
+
+
+def fuse(pp: ProgramPlan) -> ProgramPlan:
+    """The §4.3 optimization pass, applied for real.
+
+    * **state merging** (§4.3.1): at every program-node boundary, the
+      previous node's trailing superstep absorbs the next node's first
+      superstep when :func:`_merge_ok` holds (merges chain, so a run of
+      one-superstep steps collapses into one superstep);
+    * **iteration fusion** (§4.3.2): a loop whose body begins with a
+      ReadRound has that round duplicated into the preceding superstep
+      (the prefetch) and merged into the body's last superstep — the
+      loop-back edge overlaps the round with the previous iteration's
+      tail, saving one superstep per iteration. The prefetch executes
+      *after* the tail's ops, so it reads exactly the next iteration's
+      input state; nested loops keep an explicit init (no fusion), as in
+      the paper.
+
+    Executors walk the returned plan directly; since parts stay in
+    primitive-op order, fused execution is the unfused op sequence with
+    different dispatch boundaries (plus one discarded trailing prefetch
+    per fused loop) — bit-identical results, fewer supersteps.
+    """
+
+    def fuse_items(items) -> List[object]:
+        out: List[object] = []
+        for it in items:
+            if isinstance(it, PlanLoop):
+                body = fuse_items(list(it.body))
+                fused_loop = False
+                if (
+                    not any(isinstance(b, PlanLoop) for b in body)
+                    and len(body) >= 2
+                    and isinstance(body[0], Superstep)
+                    and len(body[0].parts) == 1
+                    and isinstance(body[0].parts[0].op, ReadRound)
+                    and out
+                    and isinstance(out[-1], Superstep)
+                ):
+                    s1 = body[0].parts[0]
+                    last = body[-1]
+                    body = body[1:-1] + [
+                        Superstep(last.parts + (s1,), last.head)
+                    ]
+                    out[-1] = Superstep(out[-1].parts + (s1,), out[-1].head)
+                    fused_loop = True
+                out.append(
+                    dataclasses.replace(
+                        it, body=tuple(body), fused=fused_loop
+                    )
+                )
+            else:
+                if (
+                    out
+                    and isinstance(out[-1], Superstep)
+                    and it.head
+                    and _merge_ok(out[-1], it)
+                ):
+                    out[-1] = Superstep(
+                        out[-1].parts + it.parts, out[-1].head
+                    )
+                else:
+                    out.append(it)
+        return out
+
+    return dataclasses.replace(
+        pp, items=tuple(fuse_items(list(pp.items))), fused=True
+    )

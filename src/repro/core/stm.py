@@ -1,32 +1,23 @@
 """State-transition-machine model of compiled Palgol programs (paper §4.2–4.3).
 
 The STM is the *accounting* artifact: it records how many Pregel supersteps
-the compiled program costs, under either communication model:
+the compiled program costs. Since the program-level plan IR landed
+(:func:`repro.core.plan.lower_program` + :func:`repro.core.plan.fuse`),
+this module derives **everything** from that IR — it contains no superstep
+expansion and no merging/fusion logic of its own:
 
-* ``mode="push"`` — paper-faithful: chain access via the PushSolver's
-  message-passing plans (request/reply style, minimal rounds), neighborhood
-  communication via a combined send superstep. Since the push schedule
-  became executable (``repro.core.plan._lower_push``), this counts the
-  very plan ops the executors dispatch — same as every other mode.
-* ``mode="pull"`` — this framework's dense execution: one-sided gather
-  rounds (pointer doubling), strictly ≤ push rounds.
+* ``optimize=False`` counts the unfused :class:`~repro.core.plan.ProgramPlan`
+  (one superstep per plan op — what ``run_bsp(..., fuse=False)`` executes);
+* ``optimize=True`` counts the :func:`~repro.core.plan.fuse`-rewritten plan
+  (§4.3.1 state merging + §4.3.2 iteration fusion — what the executors
+  dispatch by default), so optimized accounting equals optimized execution
+  by construction.
 
-Optimizations modeled exactly as in the paper:
-
-* **state merging** (§4.3.1): adjacent states across a sequence boundary
-  merge because the next program's first superstep ignores incoming
-  messages (message-independence) — one superstep saved per boundary;
-* **iteration fusion** (§4.3.2): when an iteration body begins with a
-  remote-reading superstep S₁, S₁ is duplicated into the init state and
-  merged into the last body state, removing one superstep per iteration;
-* **naive mode**: both optimizations off and chain reads compiled as
-  sequential request/reply conversations — the "straightforward" compilation
-  the paper compares against (and a stand-in for typical hand-written code
-  structure).
-
-Superstep count for a run is a *linear functional* of the per-iteration trip
-counts: ``total = constant + Σ_i per_iter_i × trips_i``; ``count()`` takes
-the measured trip counts from execution.
+``mode`` is the chain-access schedule (``pull``/``push``/``naive``/``auto``,
+see :mod:`repro.core.plan`). Superstep count for a run is a *linear
+functional* of the per-iteration trip counts:
+``total = base + Σ_i per_iter_i × trips_i``; ``count()`` takes the measured
+trip counts from execution.
 """
 
 from __future__ import annotations
@@ -82,28 +73,33 @@ class CostModel:
         return total
 
 
-def _step_states(
-    step: ast.Step,
-    mode: str,
-    byte_costs: Optional[plan_mod.ByteCostModel] = None,
-) -> List[State]:
-    if mode not in plan_mod.SCHEDULES:
-        raise ValueError(f"unknown mode {mode!r}")
-    # every schedule is executable: one State per plan op — the cost model
-    # counts the very op list the executors dispatch, so they cannot
-    # diverge (push included since repro.core.plan._lower_push landed)
-    plan = plan_mod.lower_step(step, schedule=mode, byte_costs=byte_costs)
-    states: List[State] = []
-    ri = 0
-    for op in plan.ops:
-        if isinstance(op, plan_mod.ReadRound):
-            states.append(State("read", f"rr{ri}"))
-            ri += 1
-        elif isinstance(op, plan_mod.MainCompute):
-            states.append(State("main", "main"))
+def _part_label(ref: plan_mod.OpRef, i: int) -> Tuple[str, str]:
+    """(kind, label) of one superstep part, for the STM rendering."""
+    op = ref.op
+    if isinstance(op, plan_mod.ReadRound):
+        return "read", f"rr{i}"
+    if isinstance(op, plan_mod.RemoteUpdate):
+        return "update", "ru"
+    if isinstance(op, plan_mod.IterInit):
+        return "main", "iter-init"
+    if isinstance(op, plan_mod.StopOp):
+        return "main", "stop"
+    return "main", "main"
+
+
+def _to_states(items) -> List:
+    out: List = []
+    for it in items:
+        if isinstance(it, plan_mod.Superstep):
+            kinds_labels = [
+                _part_label(ref, i) for i, ref in enumerate(it.parts)
+            ]
+            kind, label = kinds_labels[0]
+            merged = tuple(lbl for _, lbl in kinds_labels[1:])
+            out.append(State(kind, label, merged=merged))
         else:
-            states.append(State("update", "ru"))
-    return states
+            out.append(Loop(_to_states(it.body), it.iter_index, it.fused))
+    return out
 
 
 def build_stm(
@@ -112,96 +108,20 @@ def build_stm(
     optimize: bool = True,
     byte_costs: Optional[plan_mod.ByteCostModel] = None,
 ) -> Tuple[STM, CostModel]:
-    """Build the STM and its superstep cost model.
+    """Build the STM and its superstep cost model off the program plan.
 
-    ``optimize=False`` gives the naive compilation (no merging/fusion,
-    request-reply chains) used as the manual-style baseline. ``byte_costs``
-    only affects ``mode="auto"`` (byte-aware per-step selection, matching
-    executors given the same costs).
+    ``optimize=True`` counts the fused plan (state merging + iteration
+    fusion — the default execution schedule); ``optimize=False`` counts the
+    unfused plan (``fuse=False`` execution / the manual-style baseline when
+    combined with ``mode="naive"``). ``byte_costs`` only affects
+    ``mode="auto"`` (byte-aware per-step selection, matching executors
+    given the same costs).
     """
-    iter_counter = [0]
-
-    def build(p: ast.Prog) -> List:
-        if isinstance(p, ast.Step):
-            return list(_step_states(p, mode, byte_costs))
-        if isinstance(p, ast.StopStep):
-            return [State("main", "stop")]
-        if isinstance(p, ast.Seq):
-            out: List = []
-            for sub in p.progs:
-                states = build(sub)
-                if (
-                    optimize
-                    and out
-                    and states
-                    and isinstance(out[-1], State)
-                    and isinstance(states[0], State)
-                ):
-                    # §4.3.1 state merging across the sequence boundary
-                    left, right = out[-1], states[0]
-                    out[-1] = State(
-                        left.kind,
-                        left.label,
-                        merged=left.merged + (right.label,) + right.merged,
-                    )
-                    states = states[1:]
-                out.extend(states)
-            return out
-        if isinstance(p, ast.Iter):
-            body = build(p.body)
-            if any(isinstance(b, Loop) for b in body):
-                # nested iteration: keep an explicit init state, no fusion
-                idx = iter_counter[0]
-                iter_counter[0] += 1
-                return [State("main", "iter-init"), Loop(body, idx, fused=False)]
-            idx = iter_counter[0]
-            iter_counter[0] += 1
-            fused = (
-                optimize
-                and body
-                and isinstance(body[0], State)
-                and body[0].kind == "read"
-            )
-            if fused:
-                # §4.3.2: S1 duplicated into init and merged into S_n
-                s1 = body[0]
-                rest = body[1:]
-                last = rest[-1]
-                rest[-1] = State(
-                    last.kind, last.label, merged=last.merged + (s1.label,)
-                )
-                init = State("main", "iter-init", merged=(s1.label,))
-                return [init, Loop(rest, idx, fused=True)]
-            return [State("main", "iter-init"), Loop(body, idx, fused=False)]
-        raise TypeError(type(p))
-
-    flat = build(prog)
-    base = 0
-    per_iter: Dict[int, int] = {}
-    detail: List[str] = []
-
-    def account(items: List, multiplier_key=None):
-        nonlocal base
-        for it in items:
-            if isinstance(it, State):
-                if multiplier_key is None:
-                    base += 1
-                else:
-                    per_iter[multiplier_key] = per_iter.get(multiplier_key, 0) + 1
-            else:  # Loop
-                assert multiplier_key is None or True
-                # nested loops: attribute inner states to the inner counter
-                account(it.body, it.iter_index)
-
-    account(flat)
-    stm = STM(flat)
-    for it in flat:
-        if isinstance(it, Loop):
-            detail.append(
-                f"loop#{it.iter_index}: {len([s for s in it.body if isinstance(s, State)])}"
-                f" supersteps/iter (fused={it.fused})"
-            )
-    return stm, CostModel(base, per_iter, detail)
+    pp = plan_mod.lower_program(prog, schedule=mode, byte_costs=byte_costs)
+    if optimize:
+        pp = plan_mod.fuse(pp)
+    base, per_iter, detail = pp.cost()
+    return STM(_to_states(pp.items)), CostModel(base, per_iter, detail)
 
 
 def superstep_report(
@@ -210,27 +130,39 @@ def superstep_report(
 ) -> Dict[str, CostModel]:
     """Cost models under the compilation regimes.
 
-    * ``palgol_push``  — paper-faithful compiler output (logic-system chain
-      plans, state merging, iteration fusion);
-    * ``palgol_pull``  — this framework's dense schedule (gather staging);
-    * ``pull_staged``  — pull schedule without merging/fusion (matches the
-      staged BSP executor's actually-executed count);
-    * ``push``         — push schedule without merging/fusion (matches
-      ``schedule="push"`` execution on every executor);
+    * ``palgol_push``  — paper-faithful compiler output (push chain plans,
+      state merging, iteration fusion) — what ``schedule="push"`` executes
+      by default (``fuse=True``);
+    * ``palgol_pull``  — this framework's dense schedule, fused — what
+      ``schedule="pull"``/default executes (``fuse=True``);
+    * ``pull_staged``  — pull schedule without merging/fusion (matches
+      ``fuse=False`` execution on every executor);
+    * ``push``         — push schedule, unfused (``schedule="push",
+      fuse=False``);
     * ``naive``        — request/reply chains, no merging/fusion (the
       "straightforward"/manual baseline the paper compares against);
-    * ``auto``         — per-step cheapest of pull/push/naive, unfused
-      (matches ``schedule="auto"`` execution on both the staged and the
-      partitioned executor; pass the same ``byte_costs`` the executor got
-      for the byte-aware selection to line up).
+    * ``auto``         — per-step cheapest of pull/push/naive, unfused;
+    * ``fused_pull`` / ``fused_push`` — aliases of the ``palgol_*`` keys;
+    * ``fused_naive`` / ``fused_auto`` — the remaining schedules under the
+      fuse pass, completing the (schedule × fuse) count matrix every
+      ``run_bsp(schedule=s, fuse=f)`` cell can be checked against (pass the
+      same ``byte_costs`` the executor got so ``auto`` lines up).
     """
+    fused_pull = build_stm(prog, "pull", optimize=True)[1]
+    fused_push = build_stm(prog, "push", optimize=True)[1]
     return {
-        "palgol_push": build_stm(prog, "push", optimize=True)[1],
-        "palgol_pull": build_stm(prog, "pull", optimize=True)[1],
+        "palgol_push": fused_push,
+        "palgol_pull": fused_pull,
         "pull_staged": build_stm(prog, "pull", optimize=False)[1],
         "push": build_stm(prog, "push", optimize=False)[1],
         "naive": build_stm(prog, "naive", optimize=False)[1],
         "auto": build_stm(
             prog, "auto", optimize=False, byte_costs=byte_costs
+        )[1],
+        "fused_pull": fused_pull,
+        "fused_push": fused_push,
+        "fused_naive": build_stm(prog, "naive", optimize=True)[1],
+        "fused_auto": build_stm(
+            prog, "auto", optimize=True, byte_costs=byte_costs
         )[1],
     }

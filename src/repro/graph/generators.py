@@ -128,5 +128,7 @@ def forest_pointers(n: int, n_trees: int = 4, seed: int = 0) -> np.ndarray:
         if u in roots:
             continue
         # point to a random smaller-indexed vertex to keep it acyclic-ish; or a root
-        parent[u] = rng.choice(roots) if rng.random() < 0.3 else rng.integers(0, max(u, 1))
+        parent[u] = (
+            rng.choice(roots) if rng.random() < 0.3 else rng.integers(0, max(u, 1))
+        )
     return parent

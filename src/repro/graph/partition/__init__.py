@@ -41,4 +41,5 @@ from repro.graph.partition.stats import (  # noqa: F401
     byte_cost_model,
     comm_bytes_report,
     partition_stats,
+    request_dedup_report,
 )

@@ -1,33 +1,37 @@
 """`placement="partitioned"` execution of Palgol programs.
 
 ``run_bsp_partitioned`` is the partitioned twin of
-:func:`repro.pregel.runtime.run_bsp`: the same host-side superstep walk
-(Seq/Iter/Stop, fixed-point aggregator round-trips, superstep counting),
-but each Palgol step executes as ONE shard_map dispatch over the
-:class:`~repro.graph.partition.partitioner.PartitionedGraph` layout. Inside
-the shard_map body the unchanged :class:`~repro.core.codegen.StepExecutor`
-runs with a :class:`ShardComm`, folding the step's
-:class:`~repro.core.plan.StepPlan` ops onto the halo collectives:
+:func:`repro.pregel.runtime.run_bsp`: the same host-side program-plan walk
+(:func:`repro.pregel.runtime.walk_plan` — Seq/Iter/Stop sequencing,
+fixed-point aggregator round-trips, fused superstep counting, frontier
+instrumentation), but each **fused superstep** executes as ONE shard_map
+dispatch over the :class:`~repro.graph.partition.partitioner.PartitionedGraph`
+layout. Inside the shard_map body the unchanged
+:class:`~repro.core.codegen.StepExecutor` runs one plan op at a time
+(:func:`~repro.core.codegen.exec_plan_part`) with a :class:`ShardComm`,
+mapping ops onto the halo collectives:
 
 * ``ReadRound`` for neighborhood sends (``F[e.id]``) → static
   :func:`~.halo.halo_exchange` (moves only boundary state);
 * ``ReadRound`` for chain accesses (``D[D[u]]``) →
   :func:`~.halo.gather_global` — once per pull round (pointer doubling
   rebuilds its request halo from the current indirection field), once
-  per hop under ``schedule="naive"`` (the gather_global exchange *is* the
-  request/reply pair, so the hop's two supersteps are charged honestly),
-  and once per ``push_reply`` round under ``schedule="push"`` (the
-  request bucketing inside gather_global *is* the combined request set —
-  one slot per owner shard — so the paired ``push_request`` superstep's
-  exchange is paid here; combined replies map onto the reply
-  ``all_to_all``);
+  per hop under ``schedule="naive"``, once per ``push_reply`` round under
+  ``schedule="push"`` (the deduplicated request bucketing inside
+  gather_global *is* the combined request set);
 * ``RemoteUpdate`` → :func:`~.halo.scatter_reduce` + a local fold at the
-  owner (the same combiner-aware reduce-scatter push-mode remote writes
-  ride).
+  owner.
 
-Superstep accounting is ``plan.n_supersteps`` — the identical plan the
-staged dense executor dispatches — so STM cross-checks carry over by
-construction, for every schedule (``pull``/``push``/``naive``/``auto``).
+A *merged* superstep of the fused plan (§4.3) runs its parts inside the
+same dispatch: the halo exchange of a step's first ReadRound piggybacks on
+the merged RemoteUpdate's reduce-scatter — one barrier, both collectives —
+and the per-shard mailbox (chain/neighborhood buffers, pending remote
+payloads) crosses dispatch boundaries as sharded ``[S, ...]`` arrays.
+
+Superstep accounting is the walk itself — one count per dispatched (fused)
+superstep, the identical plan the staged dense executor dispatches — so
+STM cross-checks carry over by construction, for every schedule and both
+``fuse`` settings.
 """
 
 from __future__ import annotations
@@ -40,9 +44,9 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core import ast
-from repro.core.codegen import HALTED, StepExecutor, _EdgeCtx, make_stop_fn
-from repro.core.plan import ByteCostModel, StepPlan, lower_step
+from repro.core import plan as plan_mod
+from repro.core.codegen import HALTED, _EdgeCtx, exec_plan_part
+from repro.core.plan import ByteCostModel
 from repro.graph import ops as gops
 from repro.graph.partition import halo
 from repro.graph.partition.partitioner import (
@@ -51,7 +55,7 @@ from repro.graph.partition.partitioner import (
     partition_graph,
     unpartition_fields,
 )
-from repro.pregel.runtime import BSPResult, walk_program
+from repro.pregel.runtime import BSPResult, walk_plan
 
 AXIS = halo.AXIS
 
@@ -174,45 +178,39 @@ def _local_view(pg: PartitionedGraph) -> PartitionedGraph:
     )
 
 
-def _make_sharded_fn(pg: PartitionedGraph, mesh, field_keys, make_local_fn):
-    """jit(shard_map(...)) wrapper shared by step and stop dispatches.
+def _make_superstep_fn(ss: plan_mod.Superstep, pg: PartitionedGraph, mesh):
+    """jit(shard_map(...)) executing ONE fused superstep's parts in order.
 
-    ``make_local_fn(pgl, comm)`` returns the per-shard ``fields → fields``
-    function; this owns all the plumbing (specs, block squeeze/unsqueeze)
-    so it cannot diverge between the two dispatch kinds.
+    ``(fields, mailbox, pg) -> (fields, mailbox)`` over per-shard blocks;
+    the specs are pytree prefixes (every fields/mailbox leaf is a
+    ``[S, ...]`` block over the ``shard`` axis), so mailbox keysets may
+    differ between supersteps without bespoke spec plumbing. A merged
+    superstep's collectives (e.g. a RemoteUpdate's reduce-scatter plus the
+    next step's halo exchange) land in this one dispatch.
     """
     from jax.experimental.shard_map import shard_map
 
-    fspec = {k: P(AXIS) for k in field_keys}
+    tmap = jax.tree_util.tree_map
 
-    def body(flds, pgb):
+    def body(flds, mbox, pgb):
         pgl = _local_view(pgb)
         comm = ShardComm(pgl)
-        local = {k: v[0] for k, v in flds.items()}
-        new = make_local_fn(pgl, comm)(local)
-        return {k: v[None] for k, v in new.items()}
+        local_f = {k: v[0] for k, v in flds.items()}
+        local_m = tmap(lambda v: v[0], mbox)
+        for ref in ss.parts:
+            local_f, local_m = exec_plan_part(ref, pgl, comm, local_f, local_m)
+        return (
+            {k: v[None] for k, v in local_f.items()},
+            tmap(lambda v: v[None], local_m),
+        )
 
     return jax.jit(
         shard_map(
-            body, mesh=mesh, in_specs=(fspec, pg_partition_specs(pg)),
-            out_specs=fspec, check_rep=False,
+            body, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), pg_partition_specs(pg)),
+            out_specs=(P(AXIS), P(AXIS)),
+            check_rep=False,
         )
-    )
-
-
-def _make_step_fn(
-    step: ast.Step, plan: StepPlan, pg: PartitionedGraph, mesh, field_keys
-):
-    return _make_sharded_fn(
-        pg, mesh, field_keys,
-        lambda pgl, comm: StepExecutor(step, pgl, comm=comm, plan=plan),
-    )
-
-
-def _make_stop_fn(stop: ast.StopStep, pg: PartitionedGraph, mesh, field_keys):
-    return _make_sharded_fn(
-        pg, mesh, field_keys,
-        lambda pgl, comm: make_stop_fn(stop, pgl, comm=comm),
     )
 
 
@@ -221,7 +219,7 @@ def _make_stop_fn(stop: ast.StopStep, pg: PartitionedGraph, mesh, field_keys):
 
 
 def run_bsp_partitioned(
-    prog: ast.Prog,
+    prog,
     graph,
     fields: Dict[str, jax.Array],
     schedule: str = "pull",
@@ -229,22 +227,26 @@ def run_bsp_partitioned(
     mesh=None,
     n_shards: int = None,
     byte_costs: Optional[ByteCostModel] = None,
+    fuse: bool = True,
 ) -> BSPResult:
     """Execute a Palgol program over partitioned vertex state.
 
     Same contract as :func:`repro.pregel.runtime.run_bsp` (canonical field
-    dict in, final *dense* fields + superstep count + trips out); the graph
-    is partitioned over ``mesh`` (default: a 1-D mesh over all local
-    devices, built by :func:`repro.dist.sharding.shard_mesh`). Every
-    schedule runs here: ``"pull"`` (pointer-doubled gather_global rounds),
-    ``"push"`` (the paper's request/combined-reply rounds — gather_global's
-    owner-bucketed request exchange is the combined request set),
-    ``"naive"`` (one gather_global per chain hop — the honest request/reply
-    wire cost), ``"auto"`` (cheapest per step by plan op count, or by the
-    byte model when ``byte_costs`` is given — build one from this layout
-    with :func:`repro.graph.partition.byte_cost_model`).
+    dict in, final *dense* fields + superstep count + trips + frontier
+    sizes out); the graph is partitioned over ``mesh`` (default: a 1-D
+    mesh over all local devices, built by
+    :func:`repro.dist.sharding.shard_mesh`). Every schedule runs here
+    (``pull``/``push``/``naive``/``auto`` — build byte costs from this
+    layout with :func:`repro.graph.partition.byte_cost_model`), and
+    ``fuse=True`` (default) dispatches the §4.3-fused program plan — one
+    shard_map call per *fused* superstep, merged collectives combined in
+    one dispatch; ``fuse=False`` dispatches the unfused per-op expansion.
     """
     from repro.dist import sharding as shd
+
+    pp = plan_mod.lower_program(prog, schedule=schedule, byte_costs=byte_costs)
+    if fuse:
+        pp = plan_mod.fuse(pp)
 
     if mesh is None:
         mesh = shd.shard_mesh(n_shards)
@@ -261,32 +263,23 @@ def run_bsp_partitioned(
 
     counter = [0]
     trips: List[int] = []
-    cache: Dict[int, tuple] = {}
-    keys = tuple(sorted(pfields))
+    active_sets: List[List[int]] = []
+    ss_fns: Dict[int, object] = {}
+    mailbox_box = [{}]
 
-    def exec_step(step: ast.Step, flds):
-        if id(step) not in cache:
-            plan = lower_step(step, schedule=schedule, byte_costs=byte_costs)
-            cache[id(step)] = (
-                _make_step_fn(step, plan, pg, mesh, keys),
-                plan.n_supersteps,
-            )
-        fn, n_ss = cache[id(step)]
-        counter[0] += n_ss
-        return fn(flds, pg)
+    def exec_superstep(ss: plan_mod.Superstep, flds):
+        if id(ss) not in ss_fns:
+            ss_fns[id(ss)] = _make_superstep_fn(ss, pg, mesh)
+        flds, mailbox_box[0] = ss_fns[id(ss)](flds, mailbox_box[0], pg)
+        return flds
 
-    def exec_stop(stop: ast.StopStep, flds):
-        if id(stop) not in cache:
-            cache[id(stop)] = (_make_stop_fn(stop, pg, mesh, keys), 1)
-        fn, n_ss = cache[id(stop)]
-        counter[0] += n_ss
-        return fn(flds, pg)
-
-    out = walk_program(
-        prog, pfields, exec_step, exec_stop, counter, trips, max_iters
+    out = walk_plan(
+        pp, pfields, exec_superstep, counter, trips, max_iters,
+        active_sets=active_sets, vertex_ndim=2,
     )
     return BSPResult(
         fields=unpartition_fields(pg, out),
         supersteps=counter[0],
         trips=trips,
+        active_sets=active_sets,
     )

@@ -87,6 +87,7 @@ def gather_global(
     v_max: int,
     fill=None,
     axis: str = AXIS,
+    dedup: bool = True,
 ) -> jax.Array:
     """Dynamic read of ``field[idx]`` across shards (request/reply).
 
@@ -94,11 +95,29 @@ def gather_global(
     out-of-range ids clip (read vertex ``N-1``); otherwise they read
     ``fill``. Two ``all_to_all`` rounds, ``2·S·K`` values of traffic per
     shard — the honest wire cost of data-dependent remote reads.
+
+    ``dedup=True`` (default) combines duplicate requests before bucketing
+    — one request slot and one reply per *distinct* target id (Pregel
+    message combining on the request side; replies fan back out through
+    the inverse permutation at the requester). The exchange shapes stay
+    static, but every duplicate collapses to the padding sentinel, so the
+    live payload shrinks to the combined request set — what the push byte
+    model (:class:`repro.core.plan.ByteCostModel.combined_request_set`)
+    charges for.
     """
     (k,) = idx.shape
     n_shards = starts.shape[0] - 1
     if n_shards == 1:
         return gops.gather(x, jnp.where(idx >= n_vertices, v_max, idx), fill)
+    if dedup and k > 1:
+        uniq, inv = jnp.unique(
+            idx, return_inverse=True, size=k, fill_value=n_vertices
+        )
+        vals = gather_global(
+            x, uniq.astype(idx.dtype), starts, n_vertices, v_max,
+            fill=fill, axis=axis, dedup=False,
+        )
+        return vals[inv.reshape(-1)]
     idxc = jnp.clip(idx, 0, n_vertices - 1)
     owner, slot = _owner_and_slot(idxc, starts, n_shards)
     local = (idxc - starts[owner]).astype(jnp.int32)

@@ -97,6 +97,35 @@ def comm_bytes_report(
     }
 
 
+def request_dedup_report(
+    idx,
+    n_vertices: int,
+    bytes_per_value: int = 4,
+    reply_width: int = 1,
+) -> Dict:
+    """Measured wire effect of ``gather_global``'s request dedup pass.
+
+    ``idx`` is one round's request set (a chain-access indirection field,
+    e.g. S-V's ``D``). ``raw`` is one slot per live requester — what the
+    pre-dedup bucketing shipped; ``deduped`` is one slot per *distinct*
+    target — what the unique-pass ships now. The gap is the modeled
+    combining advantage (``combined_request_set``) turned into measured
+    bytes: requests ship ids, replies ship ``reply_width`` values each.
+    """
+    idx = np.asarray(idx)
+    live = idx[(idx >= 0) & (idx < n_vertices)]
+    raw = int(live.size)
+    ded = int(np.unique(live).size)
+    per_slot = bytes_per_value * (1 + reply_width)  # request id + reply
+    return {
+        "raw_request_slots": raw,
+        "deduped_request_slots": ded,
+        "raw_bytes": raw * per_slot,
+        "deduped_bytes": ded * per_slot,
+        "dedup_factor": None if ded == 0 else raw / ded,
+    }
+
+
 def byte_cost_model(
     graph,
     n_shards: int,

@@ -62,7 +62,9 @@ def sample_neighbors(csr: CSR, nodes: jax.Array, fanout: int, key) -> SampledBlo
     """Uniform-with-replacement sample of ``fanout`` in-neighbors per node."""
     start = csr.indptr[nodes]
     degree = csr.indptr[nodes + 1] - start
-    r = jax.random.randint(key, (nodes.shape[0], fanout), 0, jnp.maximum(degree, 1)[:, None])
+    r = jax.random.randint(
+        key, (nodes.shape[0], fanout), 0, jnp.maximum(degree, 1)[:, None]
+    )
     idx = start[:, None] + r
     neighbors = jnp.take(csr.indices, idx, mode="clip")
     mask = degree[:, None] > 0

@@ -511,6 +511,7 @@ def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4"), costs=None) -> dic
     import jax.numpy as jnp
 
     from repro.core import algorithms as alg, compile_program
+    from repro.core import plan as plan_mod
     from repro.core.plan import SCHEDULES, program_plan_records
     from repro.graph import generators as G
 
@@ -530,6 +531,19 @@ def _palgol_step_plans(algos=("sssp", "wcc", "sv", "chain4"), costs=None) -> dic
                 _dc.replace(cp, byte_costs=costs).step_plans("auto"),
                 costs=costs,
             )
+        # the §4.3-fused program schedule the executors dispatch by default:
+        # merged supersteps + the per-iteration saving, vs the unfused base
+        unfused = plan_mod.lower_program(cp.prog, schedule="pull")
+        fused = plan_mod.fuse(unfused)
+        ub, up, _ = unfused.cost()
+        fb, fp, _ = fused.cost()
+        cell["fused_program"] = {
+            "items": fused.describe(),
+            "base": fb,
+            "per_iter": {str(k): v for k, v in fp.items()},
+            "unfused_base": ub,
+            "unfused_per_iter": {str(k): v for k, v in up.items()},
+        }
         out[name] = cell
     return out
 
@@ -573,6 +587,17 @@ def palgol_partition_cell(n_shards: int = 256, scale: int = 18) -> dict:
     rec["step_plans"] = _palgol_step_plans(costs=costs)
     for name, cell in rec["step_plans"].items():
         for sched, steps in cell.items():
+            if sched == "fused_program":
+                print(
+                    f"plan {name} fused program: base={steps['base']} "
+                    f"per_iter={steps['per_iter']} (unfused "
+                    f"base={steps['unfused_base']} "
+                    f"per_iter={steps['unfused_per_iter']})",
+                    flush=True,
+                )
+                for line in steps["items"]:
+                    print(f"  {line}", flush=True)
+                continue
             for i, s in enumerate(steps):
                 print(
                     f"plan {name} step{i} [{sched}->{s['resolved']}] "

@@ -1,9 +1,16 @@
 """Staged BSP executor: one device dispatch per Pregel superstep.
 
-Execution model (mirrors paper Fig. 9): each Palgol step is lowered by
-:func:`repro.core.plan.lower_step` to a :class:`~repro.core.plan.StepPlan`
-— remote-reading supersteps, a main superstep, a remote-updating superstep
-— and this runtime dispatches **one jitted device call per plan op**:
+Execution model (mirrors paper Fig. 9 + §4.3): the whole Palgol program is
+lowered by :func:`repro.core.plan.lower_program` to a
+:class:`~repro.core.plan.ProgramPlan` and — by default — rewritten by
+:func:`repro.core.plan.fuse` (state merging + iteration fusion, §4.3).
+This runtime dispatches **one jitted device call per fused superstep**: a
+merged superstep's parts (e.g. the previous step's RemoteUpdate plus the
+next step's first ReadRound, or a fused loop's main compute plus the next
+iteration's prefetched ReadRound) execute inside one dispatch, threading a
+program-level mailbox (chain/neighborhood buffers, pending remote-write
+payloads) between dispatches. ``fuse=False`` keeps the historical per-op
+expansion — same results, more supersteps.
 
 * ``schedule="pull"`` plans chain reads by the PullSolver gather DAG
   (this framework's optimized one-sided schedule);
@@ -19,10 +26,12 @@ Execution model (mirrors paper Fig. 9): each Palgol step is lowered by
 * ``schedule="auto"`` picks the cheapest plan per step (by op count, or by
   the byte model when ``byte_costs`` is given);
 * fixed-point termination is checked on host between supersteps, exactly like
-  Pregel's aggregator round-trip.
+  Pregel's aggregator round-trip; the per-iteration frontier size (how many
+  vertices' fix fields changed) is recorded in ``BSPResult.active_sets`` —
+  the live request-set instrumentation the byte cost model feeds on.
 
 The executed-superstep count is returned and cross-checked in tests against
-the STM cost models of ``repro.core.stm`` — both count the same plan ops.
+the STM cost models of ``repro.core.stm`` — both count the same fused plan.
 """
 
 from __future__ import annotations
@@ -34,8 +43,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ast
-from repro.core.codegen import HALTED, StepExecutor, make_stop_fn
-from repro.core.plan import ByteCostModel, ReadRound, RemoteUpdate, lower_step
+from repro.core import plan as plan_mod
+from repro.core.codegen import HALTED, StepExecutor, _RemoteMsg, make_stop_fn
+from repro.core.plan import (
+    ByteCostModel,
+    ReadRound,
+    RemoteUpdate,
+    StepPlan,
+    lower_step,
+)
 from repro.graph import ops as gops
 
 
@@ -44,11 +60,28 @@ class BSPResult:
     fields: Dict[str, jax.Array]
     supersteps: int
     trips: List[int]
+    # per loop entry, per iteration: number of vertices whose fix fields
+    # changed that iteration (the fixed-point frontier — the measured
+    # request-set size ByteCostModel.request_set models)
+    active_sets: List[List[int]] = dataclasses.field(default_factory=list)
 
 
 class _StagedStep:
-    """One Palgol step: its :class:`StepPlan` compiled to a list of
-    superstep callables — one jitted device dispatch per plan op."""
+    """One Palgol step: its :class:`StepPlan` compiled to per-op superstep
+    callables ``(fields, mailbox) -> (fields, mailbox)``; ``ns`` prefixes
+    this step's mailbox keys so supersteps from different steps can share
+    the program-level mailbox of the fused plan.
+
+    This path deliberately does NOT reuse
+    :func:`repro.core.codegen.exec_plan_part` (the dense/partitioned
+    consumer): the staged dispatches additionally emulate the *wire
+    traffic* of each round in their lowered HLO — the naive ``:req``
+    requester scatters and the push combined-request buffers — which the
+    fused dense trace intentionally omits (its ``push_request`` op is
+    compute-free). The replicated mailbox keys here are therefore a
+    superset of codegen's; keep the two protocols in sync when adding op
+    kinds or buffer classes.
+    """
 
     def __init__(
         self,
@@ -56,20 +89,37 @@ class _StagedStep:
         graph,
         schedule: str,
         byte_costs: Optional[ByteCostModel] = None,
+        plan: Optional[StepPlan] = None,
+        ns: str = "",
     ):
         self.step = step
         self.graph = graph
-        self.plan = lower_step(step, schedule=schedule, byte_costs=byte_costs)
+        self.plan = (
+            plan
+            if plan is not None
+            else lower_step(step, schedule=schedule, byte_costs=byte_costs)
+        )
         self.info = self.plan.info
         # resolved (auto → pull/push/naive)
         self.schedule = self.plan.schedule
+        self.ns = ns
+
+    # -- mailbox keys ---------------------------------------------------------
+    def _key(self, pattern) -> str:
+        return self.ns + "chain:" + "/".join(pattern)
+
+    def _pkey(self, pattern) -> str:
+        return self.ns + "pushaddr:" + "/".join(pattern)
+
+    def _nkey(self, direction, pattern) -> str:
+        return f"{self.ns}nbr:{direction}:" + "/".join(pattern)
 
     # -- read supersteps -----------------------------------------------------
     def read_stage_fns(self):
         """List of jitted ``(fields, mailbox) -> mailbox`` functions; one
-        per ReadRound op of the plan."""
+        per ReadRound op of the plan (the accounting-mirror API)."""
         return [
-            self._stage_fn(op)
+            jax.jit(self._stage_fn(op))
             for op in self.plan.ops
             if isinstance(op, ReadRound)
         ]
@@ -95,12 +145,12 @@ class _StagedStep:
                 out = dict(mailbox)
                 for ce in _op.chains:
                     owner = self._lookup(fields, out, ce.prefix)
-                    out[_key(ce.pattern) + ":req"] = self._combine_requests(
-                        owner, "set"
+                    out[self._key(ce.pattern) + ":req"] = (
+                        self._combine_requests(owner, "set")
                     )
                 return out
 
-            return jax.jit(request)
+            return request
 
         if op.kind == "push_request":
 
@@ -113,12 +163,12 @@ class _StagedStep:
                     owner = self._resolve(fields, out, send.target)
                     if owner is None:
                         continue
-                    out[_pkey(send.target) + ":req"] = self._combine_requests(
-                        owner, _op.combiner or "min"
+                    out[self._pkey(send.target) + ":req"] = (
+                        self._combine_requests(owner, _op.combiner or "min")
                     )
                 return out
 
-            return jax.jit(push_request)
+            return push_request
 
         def stage(fields, mailbox, _op=op):
             # "pull": one gather-DAG round; "reply": the owner returns its
@@ -143,26 +193,27 @@ class _StagedStep:
                     val = val + (
                         gops.gather(reqbuf, pre) // (self.graph.n_vertices + 2)
                     ).astype(val.dtype)
-                out[_key(ce.pattern)] = val
-                out.pop(_key(ce.pattern) + ":req", None)
+                out[self._key(ce.pattern)] = val
+                out.pop(self._key(ce.pattern) + ":req", None)
             if _op.kind == "push_reply":
                 # the paired push_request's address buffers were the wire
                 # accounting of *their* superstep; done — drop them so
                 # later dispatches stop threading dead device buffers
-                for k in [k for k in out if k.startswith("pushaddr:")]:
+                prefix = self.ns + "pushaddr:"
+                for k in [k for k in out if k.startswith(prefix)]:
                     out.pop(k)
             for direction, npat in _op.nbr_sends:
                 nbr, _, _, _ = self.graph.edges(direction)
                 val = self._lookup(fields, out, npat)
-                out[_nkey(direction, npat)] = gops.gather(val, nbr)
+                out[self._nkey(direction, npat)] = gops.gather(val, nbr)
             return out
 
-        return jax.jit(stage)
+        return stage
 
     def _resolve(self, fields, mailbox, pattern):
         """Pattern value if materialized/axiomatic, else None (push address
         flows may target chains materialized later the same round)."""
-        if len(pattern) <= 1 or _key(pattern) in mailbox:
+        if len(pattern) <= 1 or self._key(pattern) in mailbox:
             return self._lookup(fields, mailbox, pattern)
         return None
 
@@ -173,50 +224,75 @@ class _StagedStep:
             if pattern[0] == "Id":
                 return jnp.arange(self.graph.n_vertices, dtype=jnp.int32)
             return fields[pattern[0]]
-        return mailbox[_key(pattern)]
+        return mailbox[self._key(pattern)]
 
-    # -- main + update supersteps ---------------------------------------------
-    def main_fn(self):
+    # -- per-op superstep callables -------------------------------------------
+    def op_fn(self, op):
+        """``(fields, mailbox) -> (fields, mailbox)`` for one plan op — the
+        building block the per-superstep dispatcher composes (a fused
+        superstep is several of these sequenced inside one jit)."""
+        if isinstance(op, ReadRound):
+            stage = self._stage_fn(op)
+
+            def read(fields, mailbox):
+                return fields, stage(fields, mailbox)
+
+            return read
+        if isinstance(op, RemoteUpdate):
+            return self._update_fn(op)
+        return self._main_fn()
+
+    def _main_fn(self):
         has_ru = self.plan.has_remote_update
         materialized = self.plan.materialized
+        pending_key = self.ns + "pending"
 
         def main(fields, mailbox):
             chain_values = {
-                p: mailbox[_key(p)] for p in materialized if _key(p) in mailbox
+                p: mailbox[self._key(p)]
+                for p in materialized
+                if self._key(p) in mailbox
             }
             nbr_values = {
-                (d, p): mailbox[_nkey(d, p)]
+                (d, p): mailbox[self._nkey(d, p)]
                 for d, p in self.info.nbr_comms
-                if _nkey(d, p) in mailbox
+                if self._nkey(d, p) in mailbox
+            }
+            # the step's read buffers are consumed here; drop them so the
+            # mailbox keyset is loop-stable (fused bodies re-create the
+            # prefetched entries at iteration end)
+            out = {
+                k: v for k, v in mailbox.items()
+                if not k.startswith(self.ns)
             }
             ex = StepExecutor(self.step, self.graph, plan=self.plan)
             if has_ru:
                 new, pending = ex(
-                    fields, chain_values, split_remote=True, nbr_values=nbr_values
+                    fields, chain_values, split_remote=True,
+                    nbr_values=nbr_values,
                 )
-                payload = [(m.idx, m.values, m.mask) for m in pending]
-                return new, payload
-            return ex(fields, chain_values, nbr_values=nbr_values), []
+                out[pending_key] = tuple(
+                    (m.idx, m.values, m.mask) for m in pending
+                )
+                return new, out
+            return ex(fields, chain_values, nbr_values=nbr_values), out
 
-        return jax.jit(main)
+        return main
 
-    def update_fn(self):
-        ru = next(
-            op for op in self.plan.ops if isinstance(op, RemoteUpdate)
-        )
+    def _update_fn(self, ru: RemoteUpdate):
+        pending_key = self.ns + "pending"
 
-        def update(fields, payload):
+        def update(fields, mailbox):
+            out = dict(mailbox)
+            payload = out.pop(pending_key)
             ex = StepExecutor(self.step, self.graph, plan=self.plan)
-            from repro.core.codegen import _RemoteMsg
-
             msgs = [
                 _RemoteMsg(f, op, idx, val, mask)
                 for (f, op), (idx, val, mask) in zip(ru.writes, payload)
             ]
-            return ex.apply_remote(fields, msgs)
+            return ex.apply_remote(fields, msgs), out
 
-        return jax.jit(update)
-
+        return update
 
 def read_superstep_count(step: ast.Step, schedule: str) -> int:
     """Number of remote-reading supersteps a step costs under ``schedule``
@@ -225,69 +301,73 @@ def read_superstep_count(step: ast.Step, schedule: str) -> int:
     return lower_step(step, schedule=schedule).read_rounds
 
 
-def _key(pattern) -> str:
-    return "chain:" + "/".join(pattern)
+def _frontier_size(before, after, fix_fields, vertex_ndim: int) -> int:
+    """Vertices whose fix fields changed this iteration (the fixed-point
+    frontier). ``vertex_ndim`` is the number of leading per-vertex dims
+    (1 dense, 2 for ``[shard, row]``-blocked partitioned state)."""
+    changed = None
+    for f in fix_fields:
+        d = after[f] != before[f]
+        if d.ndim > vertex_ndim:
+            d = d.reshape(d.shape[:vertex_ndim] + (-1,)).any(axis=-1)
+        changed = d if changed is None else jnp.logical_or(changed, d)
+    return int(jnp.sum(changed))
 
 
-def _pkey(pattern) -> str:
-    return "pushaddr:" + "/".join(pattern)
-
-
-def _nkey(direction, pattern) -> str:
-    return f"nbr:{direction}:" + "/".join(pattern)
-
-
-def walk_program(
-    prog: ast.Prog,
+def walk_plan(
+    pp: plan_mod.ProgramPlan,
     fields,
-    exec_step,
-    exec_stop,
+    exec_superstep,
     counter: List[int],
     trips: List[int],
     max_iters: int,
+    active_sets: Optional[List[List[int]]] = None,
+    vertex_ndim: int = 1,
 ):
-    """Host-side superstep walk shared by every placement.
+    """Host-side walk of a (fused) program plan, shared by every placement.
 
-    ``exec_step(step, fields)`` / ``exec_stop(stop, fields)`` execute one
-    Step / StopStep (and account their own supersteps in ``counter``); this
-    walker owns sequencing, the iteration Init superstep (paper Fig. 11),
-    trip counting, and the host-side OR-aggregator fixed-point check — so
+    ``exec_superstep(superstep, fields)`` executes ONE plan superstep
+    (fused parts included) and returns the new fields; this walker owns
+    sequencing, trip counting, the host-side OR-aggregator fixed-point
+    check, the superstep counter (one per dispatched superstep — the fused
+    accounting), and the per-iteration frontier instrumentation — so
     iteration semantics cannot diverge between the replicated and
     partitioned executors.
     """
 
-    def run(p, flds):
-        if isinstance(p, ast.Step):
-            return exec_step(p, flds)
-        if isinstance(p, ast.StopStep):
-            return exec_stop(p, flds)
-        if isinstance(p, ast.Seq):
-            for q in p.progs:
-                flds = run(q, flds)
-            return flds
-        if isinstance(p, ast.Iter):
-            # the iteration Init superstep: sets up the OR-aggregator so
-            # the first termination check succeeds
-            counter[0] += 1
+    def run(items, flds):
+        for it in items:
+            if isinstance(it, plan_mod.Superstep):
+                flds = exec_superstep(it, flds)
+                counter[0] += 1
+                continue
+            # PlanLoop
             trips.append(0)
             slot = len(trips) - 1
-            limit = p.fixed_trips if p.fixed_trips is not None else max_iters
+            if active_sets is not None:
+                active_sets.append([])
+            node = it.node
+            limit = (
+                node.fixed_trips
+                if node.fixed_trips is not None
+                else max_iters
+            )
             for _ in range(limit):
-                before = {f: flds[f] for f in p.fix_fields}
-                flds = run(p.body, flds)
+                before = {f: flds[f] for f in node.fix_fields}
+                flds = run(it.body, flds)
                 trips[slot] += 1
-                if p.fix_fields:
+                if node.fix_fields:
                     # host-side aggregator round-trip (Pregel OR-aggregator)
-                    changed = any(
-                        bool(jnp.any(flds[f] != before[f]))
-                        for f in p.fix_fields
+                    frontier = _frontier_size(
+                        before, flds, node.fix_fields, vertex_ndim
                     )
-                    if not changed:
+                    if active_sets is not None:
+                        active_sets[slot].append(frontier)
+                    if frontier == 0:
                         break
-            return flds
-        raise TypeError(type(p))
+        return flds
 
-    return run(prog, fields)
+    return run(pp.items, fields)
 
 
 def run_bsp(
@@ -300,16 +380,23 @@ def run_bsp(
     mesh=None,
     n_shards: Optional[int] = None,
     byte_costs: Optional[ByteCostModel] = None,
+    fuse: bool = True,
 ) -> BSPResult:
     """Execute a Palgol program superstep-by-superstep.
 
     ``fields`` must be the full canonical field dict (use
     ``CompiledProgram.init_fields``). Returns final fields, the number of
-    actually executed supersteps, and per-iteration trip counts.
+    actually executed supersteps, per-iteration trip counts, and the
+    per-iteration fixed-point frontier sizes.
 
     ``schedule`` ∈ {"pull", "push", "naive", "auto"} selects the
     chain-access lowering (see :mod:`repro.core.plan`) and applies to both
     placements; ``byte_costs`` makes ``"auto"`` select on the byte model.
+
+    ``fuse`` (default True) executes the §4.3-fused program plan — merged
+    supersteps dispatch as ONE device call, iteration-fused loops save one
+    superstep per iteration; ``fuse=False`` dispatches the unfused per-op
+    expansion (bit-identical results, the historical superstep counts).
 
     ``placement`` selects the vertex-state layout:
 
@@ -327,48 +414,65 @@ def run_bsp(
 
         return run_bsp_partitioned(
             prog, graph, fields, schedule=schedule, max_iters=max_iters,
-            mesh=mesh, n_shards=n_shards, byte_costs=byte_costs,
+            mesh=mesh, n_shards=n_shards, byte_costs=byte_costs, fuse=fuse,
         )
     if placement != "replicated":
         raise ValueError(f"unknown placement {placement!r}")
+    pp = plan_mod.lower_program(prog, schedule=schedule, byte_costs=byte_costs)
+    if fuse:
+        pp = plan_mod.fuse(pp)
+
     counter = [0]
     trips: List[int] = []
-    # cache compiled stage functions per Step/StopStep node: supersteps
-    # re-execute across iterations without re-tracing (as a real Pregel
-    # binary would)
-    cache: Dict[int, object] = {}
+    active_sets: List[List[int]] = []
+    # caches: one _StagedStep per step, one compiled dispatch per Superstep
+    # — supersteps re-execute across iterations without re-tracing (as a
+    # real Pregel binary would)
+    staged: Dict[int, _StagedStep] = {}
+    ss_fns: Dict[int, object] = {}
+    mailbox_box = [{}]
 
-    def exec_step(step: ast.Step, flds):
-        if id(step) not in cache:
-            staged = _StagedStep(step, graph, schedule, byte_costs=byte_costs)
-            cache[id(step)] = (
-                staged,
-                staged.read_stage_fns(),
-                staged.main_fn(),
-                staged.update_fn() if staged.plan.has_remote_update else None,
+    def staged_for(ref: plan_mod.OpRef) -> _StagedStep:
+        if ref.sidx not in staged:
+            staged[ref.sidx] = _StagedStep(
+                ref.plan.step, graph, schedule,
+                plan=ref.plan, ns=f"s{ref.sidx}:",
             )
-        staged, read_fns, main_fn, update_fn = cache[id(step)]
-        mailbox: Dict[str, jax.Array] = {}
-        for stage in read_fns:
-            mailbox = stage(flds, mailbox)
-            counter[0] += 1
-        new, payload = main_fn(flds, mailbox)
-        counter[0] += 1
-        if update_fn is not None:
-            new = update_fn(new, payload)
-            counter[0] += 1
-        return new
+        return staged[ref.sidx]
 
-    def exec_stop(stop: ast.StopStep, flds):
-        if id(stop) not in cache:
-            cache[id(stop)] = jax.jit(make_stop_fn(stop, graph))
-        counter[0] += 1
-        return cache[id(stop)](flds)
+    def build_ss_fn(ss: plan_mod.Superstep):
+        part_fns = []
+        for ref in ss.parts:
+            op = ref.op
+            if isinstance(op, plan_mod.IterInit):
+                continue
+            if isinstance(op, plan_mod.StopOp):
+                stop = make_stop_fn(op.stop, graph)
+                part_fns.append(lambda f, m, _s=stop: (_s(f), m))
+            else:
+                part_fns.append(staged_for(ref).op_fn(op))
+
+        def ss_fn(flds, mailbox):
+            for fn in part_fns:
+                flds, mailbox = fn(flds, mailbox)
+            return flds, mailbox
+
+        return jax.jit(ss_fn)
+
+    def exec_superstep(ss: plan_mod.Superstep, flds):
+        if id(ss) not in ss_fns:
+            ss_fns[id(ss)] = build_ss_fn(ss)
+        flds, mailbox_box[0] = ss_fns[id(ss)](flds, mailbox_box[0])
+        return flds
 
     fields = {k: jnp.asarray(v) for k, v in fields.items()}
     if HALTED not in fields:
         fields[HALTED] = jnp.zeros((graph.n_vertices,), jnp.bool_)
-    out = walk_program(
-        prog, fields, exec_step, exec_stop, counter, trips, max_iters
+    out = walk_plan(
+        pp, fields, exec_superstep, counter, trips, max_iters,
+        active_sets=active_sets,
     )
-    return BSPResult(fields=out, supersteps=counter[0], trips=trips)
+    return BSPResult(
+        fields=out, supersteps=counter[0], trips=trips,
+        active_sets=active_sets,
+    )

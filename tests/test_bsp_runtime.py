@@ -51,15 +51,21 @@ def test_bsp_matches_dense(name):
 
 @pytest.mark.parametrize("name", ALGS)
 def test_superstep_accounting_matches_execution(name):
-    """The STM cost models must predict the staged executor's actual count."""
+    """The STM cost models must predict the staged executor's actual count
+    — fused (the default, ``palgol_*``/``fused_*`` models) and unfused
+    (``fuse=False``, the historical per-op expansion) alike."""
     g, fields = _setup(name, seed=4)
     cp = compile_program(alg.ALL[name], g, initial_fields=fields)
     _, trips, counts = cp.run(fields)
     f0 = cp.init_fields(fields)
     exec_pull = run_bsp(cp.prog, g, f0, schedule="pull")
-    assert exec_pull.supersteps == counts["pull_staged"], name
+    assert exec_pull.supersteps == counts["palgol_pull"], name
     exec_naive = run_bsp(cp.prog, g, f0, schedule="naive")
-    assert exec_naive.supersteps == counts["naive"], name
+    assert exec_naive.supersteps == counts["fused_naive"], name
+    exec_pull_unfused = run_bsp(cp.prog, g, f0, schedule="pull", fuse=False)
+    assert exec_pull_unfused.supersteps == counts["pull_staged"], name
+    exec_naive_unfused = run_bsp(cp.prog, g, f0, schedule="naive", fuse=False)
+    assert exec_naive_unfused.supersteps == counts["naive"], name
 
 
 def test_sv_superstep_reduction_structure():

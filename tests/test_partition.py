@@ -247,7 +247,13 @@ class TestPartitionedExecutionSingleShard:
                 np.asarray(dense[f]), np.asarray(res.fields[f]),
                 equal_nan=True,
             ), (name, f)
-        assert res.supersteps == counts["pull_staged"], name
+        # default execution is the §4.3-fused plan — palgol_pull totals
+        assert res.supersteps == counts["palgol_pull"], name
+        unfused = run_bsp(
+            cp.prog, g, f0, schedule="pull",
+            placement="partitioned", n_shards=1, fuse=False,
+        )
+        assert unfused.supersteps == counts["pull_staged"], name
 
     def test_bool_combiner_remote_writes(self):
         g = G.erdos_renyi(40, 3.0, directed=False, seed=5)
@@ -261,7 +267,7 @@ class TestPartitionedExecutionSingleShard:
             assert np.array_equal(
                 np.asarray(dense[f]), np.asarray(res.fields[f])
             ), f
-        assert res.supersteps == counts["pull_staged"]
+        assert res.supersteps == counts["palgol_pull"]
 
     def test_rejects_unknown_schedule(self):
         g = G.cycle(8)
@@ -358,8 +364,8 @@ SUBPROCESS_TEST = textwrap.dedent(
         for f in dense:
             a, b = np.asarray(dense[f]), np.asarray(res.fields[f])
             assert np.array_equal(a, b, equal_nan=True), (name, f)
-        assert res.supersteps == counts["pull_staged"], (
-            name, res.supersteps, counts["pull_staged"])
+        assert res.supersteps == counts["palgol_pull"], (
+            name, res.supersteps, counts["palgol_pull"])
         print(name, "ok", res.supersteps)
     print("PARTITION_SUBPROCESS_OK")
     """

@@ -180,8 +180,10 @@ end
             for placement, kw in (
                 ("replicated", {}), ("partitioned", {"n_shards": 1}),
             ):
+                # fuse=False isolates the per-step expansion this test pins
                 res = run_bsp(
-                    cp.prog, g, f0, schedule=sched, placement=placement, **kw
+                    cp.prog, g, f0, schedule=sched, placement=placement,
+                    fuse=False, **kw
                 )
                 key = {
                     "pull": "pull_staged", "auto": "pull_staged",
@@ -292,14 +294,15 @@ class TestAutoSelector:
         for placement, kw in (
             ("replicated", {}), ("partitioned", {"n_shards": 1}),
         ):
-            res = run_bsp(
-                cp.prog, g, f0, schedule="auto", placement=placement,
-                byte_costs=sparse, **kw,
-            )
-            assert res.supersteps == counts["auto"], placement
-            assert np.array_equal(
-                np.asarray(dense_out["D4"]), np.asarray(res.fields["D4"])
-            )
+            for fuse_flag, key in ((True, "fused_auto"), (False, "auto")):
+                res = run_bsp(
+                    cp.prog, g, f0, schedule="auto", placement=placement,
+                    byte_costs=sparse, fuse=fuse_flag, **kw,
+                )
+                assert res.supersteps == counts[key], (placement, fuse_flag)
+                assert np.array_equal(
+                    np.asarray(dense_out["D4"]), np.asarray(res.fields["D4"])
+                )
 
 
 MATRIX_ALGS = ["sssp", "wcc", "sv", "chain4"]
@@ -310,6 +313,14 @@ class TestExecutorScheduleMatrix:
     executor, with identical plan-derived superstep counts. S=1 exercises
     the whole partitioned machinery in-process (the 8-device subprocess
     case below keeps one multi-shard representative)."""
+
+    #: schedule → (fused, unfused) STM cost-model keys
+    SCHED_COUNTS = {
+        "pull": ("palgol_pull", "pull_staged"),
+        "push": ("palgol_push", "push"),
+        "naive": ("fused_naive", "naive"),
+        "auto": ("fused_auto", "auto"),
+    }
 
     @pytest.mark.parametrize("name", MATRIX_ALGS)
     @pytest.mark.parametrize("schedule", ["push", "naive", "auto"])
@@ -327,7 +338,8 @@ class TestExecutorScheduleMatrix:
                 np.asarray(dense[f]), np.asarray(res.fields[f]),
                 equal_nan=True,
             ), (name, schedule, f)
-        assert res.supersteps == counts[schedule]
+        # the default execution is the fused plan
+        assert res.supersteps == counts[self.SCHED_COUNTS[schedule][0]]
 
     @pytest.mark.parametrize("name", MATRIX_ALGS)
     def test_staged_and_partitioned_counts_agree(self, name):
@@ -362,18 +374,20 @@ class TestExecutorScheduleMatrix:
                     np.asarray(ref[f]), np.asarray(out[f]), equal_nan=True
                 ), (name, f)
 
-    def test_push_executed_counts_equal_palgol_push_modulo_fusion(self):
-        """Executed push supersteps == the unfused `push` STM total; the
-        paper-faithful `palgol_push` (state merging + iteration fusion)
-        differs only by those program-level optimizations, never by the
-        per-step expansion — both count the same plan ops now."""
+    def test_push_executed_counts_match_both_fuse_settings(self):
+        """Executed push supersteps == the `push` STM total when unfused,
+        and == the paper-faithful `palgol_push` total (state merging +
+        iteration fusion) by default — optimized accounting IS optimized
+        execution now, not a separate model."""
         for name in MATRIX_ALGS:
             g, fields = _setup(name)
             cp = compile_program(alg.ALL[name], g, initial_fields=fields)
             _, _, counts = cp.run(fields)
             f0 = cp.init_fields(fields)
-            res = run_bsp(cp.prog, g, f0, schedule="push")
+            res = run_bsp(cp.prog, g, f0, schedule="push", fuse=False)
             assert res.supersteps == counts["push"], name
+            fused = run_bsp(cp.prog, g, f0, schedule="push")
+            assert fused.supersteps == counts["palgol_push"], name
             assert counts["palgol_push"] <= counts["push"], name
 
 
@@ -404,7 +418,10 @@ SUBPROCESS_TEST = textwrap.dedent(
     cp = compile_program(alg.SV, g)
     dense, _, counts = cp.run()
     f0 = cp.init_fields()
-    for sched, key in (("push", "push"), ("naive", "naive"), ("auto", "auto")):
+    for sched, key in (
+        ("push", "palgol_push"), ("naive", "fused_naive"),
+        ("auto", "fused_auto"),
+    ):
         res = run_bsp(cp.prog, g, f0, schedule=sched, placement="partitioned")
         for f in dense:
             a, b = np.asarray(dense[f]), np.asarray(res.fields[f])
